@@ -1,0 +1,78 @@
+"""Shared benchmark plumbing: dataset registry, solver runners, CSV sink.
+
+Scale control: REPRO_BENCH_SCALE (default "ci") picks dataset sizes.
+  ci    — minutes on one CPU core (sweep-friendly); sizes recorded in output
+  paper — the paper's published sizes where RAM allows (Table 1)
+All emitted rows carry the actual (m, p) used.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CDConfig, FISTAConfig, FWConfig, baselines, fw_solve, path as path_lib
+from repro.core.sampling import kappa_fraction
+from repro.data import make_proxy, standardize
+from repro.data.synthetic import paper_synthetic
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "ci")
+
+# dataset name -> loader() -> Dataset (feature-major conversion done here)
+def _synth(p, n_inf):
+    def load():
+        return paper_synthetic(p, n_inf, seed=0)
+    return load
+
+
+def _proxy(name, scale_ci, scale_paper):
+    def load():
+        return make_proxy(name, scale=scale_ci if SCALE == "ci" else scale_paper, seed=0)
+    return load
+
+
+DATASETS: Dict[str, Callable] = {
+    "synthetic-10000": _synth(10_000, 100),
+    "synthetic-50000": _synth(50_000, 158),
+    "pyrim": _proxy("pyrim", 0.05, 1.0),
+    "triazines": _proxy("triazines", 0.02, 1.0),
+    "e2006-tfidf": _proxy("e2006-tfidf", 0.02, 0.15),
+    "e2006-log1p": _proxy("e2006-log1p", 0.005, 0.05),
+}
+
+CI_DATASETS = ["synthetic-10000", "pyrim", "e2006-tfidf"]
+
+
+def load_dataset(name: str):
+    ds = DATASETS[name]()
+    Xt = jnp.asarray(np.ascontiguousarray(ds.X.T))
+    y = jnp.asarray(ds.y)
+    return Xt, y, ds
+
+
+def path_grids(Xt, y, n_points: int):
+    """The paper's protocol: lambda grid from ||X^T y||_inf; delta grid from
+    a high-precision CD solve at lambda_min (same sparsity budget)."""
+    lams = path_lib.lambda_grid(Xt, y, n_points=n_points)
+    cd_ref = baselines.cd_solve(
+        Xt, y, CDConfig(lam=float(lams[-1]), max_sweeps=300, tol=1e-6),
+        jax.random.PRNGKey(0),
+    )
+    delta_max = float(jnp.sum(jnp.abs(cd_ref.alpha)))
+    deltas = path_lib.delta_grid(delta_max, n_points=n_points)
+    return lams, deltas
+
+
+class CSV:
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def emit(self, name: str, us_per_call: float, derived: str = ""):
+        row = f"{name},{us_per_call:.1f},{derived}"
+        self.rows.append(row)
+        print(row, flush=True)

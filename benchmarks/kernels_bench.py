@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: interpret-mode correctness timing vs the jnp
+reference path (wall-time here is CPU; the BlockSpec geometry + VMEM
+footprint per grid step are the TPU-relevant numbers reported)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CSV
+from repro.kernels import colstats, residual_update, sampled_scores
+from repro.kernels.fw_grad.ref import sampled_scores_ref
+
+
+def _time(fn, *args, n=5, **kw):
+    fn(*args, **kw)  # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / n
+
+
+def run(csv: CSV):
+    rng = np.random.default_rng(0)
+    p, m, bs = 4096, 512, 256
+    Xt = jnp.asarray(rng.standard_normal((p, m)).astype(np.float32))
+    r = jnp.asarray(rng.standard_normal(m).astype(np.float32))
+    blk = jnp.asarray([0, 5, 9, 2], jnp.int32)
+
+    t_ref = _time(lambda: sampled_scores_ref(Xt, r, blk, bs)[0])
+    t_int = _time(
+        lambda: sampled_scores(Xt, r, blk, block_size=bs, m_tile=256, interpret=True)
+    )
+    vmem_kb = (bs * 256 * 4 + 256 * 4 + bs * 4) / 1024  # per grid step
+    csv.emit(
+        "kernel/fw_grad", t_int * 1e6,
+        f"ref_us={t_ref*1e6:.0f};interpret_us={t_int*1e6:.0f};"
+        f"vmem_per_step_kb={vmem_kb:.0f};grid=(nb,m/mt)",
+    )
+
+    y = jnp.asarray(rng.standard_normal(m).astype(np.float32))
+    t_ref2 = _time(lambda: (Xt @ y, jnp.sum(Xt * Xt, axis=1)))
+    t_int2 = _time(lambda: colstats(Xt, y, p_tile=256, m_tile=256, interpret=True))
+    csv.emit(
+        "kernel/colstats", t_int2 * 1e6,
+        f"ref_us={t_ref2*1e6:.0f};one_pass_fused=zty+znorm2",
+    )
+
+    z = jnp.asarray(rng.standard_normal(m).astype(np.float32))
+    t_int3 = _time(
+        lambda: residual_update(r, y, z, jnp.asarray(0.3), jnp.asarray(1.0), interpret=True)
+    )
+    csv.emit("kernel/residual_update", t_int3 * 1e6, "fused_3read_1write")
+
+
+if __name__ == "__main__":
+    run(CSV())

@@ -1,0 +1,50 @@
+"""Paper Table 5: stochastic FW at |S| = 1%, 2%, 3% of p over the path —
+time, speedup vs CD, iterations, dot products, mean active features."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import CSV, CI_DATASETS, SCALE, load_dataset, path_grids
+from repro.core import CDConfig, FWConfig, path as path_lib
+from repro.core.sampling import kappa_fraction
+
+N_POINTS = 20 if SCALE == "ci" else 100
+
+
+def run(csv: CSV, datasets=None):
+    datasets = datasets or CI_DATASETS
+    for name in datasets:
+        Xt, y, ds = load_dataset(name)
+        p, m = Xt.shape
+        lams, deltas = path_grids(Xt, y, N_POINTS)
+
+        # CD reference time for the speedup column
+        t0 = time.perf_counter()
+        cd_res = path_lib.cd_path(Xt, y, lams, CDConfig(lam=0.0, max_sweeps=200, tol=1e-3))
+        cd_time = time.perf_counter() - t0
+        csv.emit(
+            f"table5/{name}/cd_ref", cd_time * 1e6 / N_POINTS,
+            f"m={m};p={p};dots={cd_res.total_dots};mean_active={cd_res.mean_active:.1f}",
+        )
+
+        for frac in (0.01, 0.02, 0.03):
+            kappa = kappa_fraction(p, frac)
+            cfg = FWConfig(
+                delta=1.0, kappa=kappa, sampling="uniform",
+                max_iters=20_000, tol=1e-3,
+            )
+            t0 = time.perf_counter()
+            res = path_lib.fw_path(Xt, y, deltas, cfg)
+            dt = time.perf_counter() - t0
+            csv.emit(
+                f"table5/{name}/fw_{int(frac*100)}pct",
+                dt * 1e6 / N_POINTS,
+                f"m={m};p={p};kappa={kappa};speedup_vs_cd={cd_time/dt:.1f}x;"
+                f"iters={res.total_iters};dots={res.total_dots};"
+                f"mean_active={res.mean_active:.1f};"
+                f"dots_vs_cd={cd_res.total_dots / max(res.total_dots,1):.1f}x",
+            )
+
+
+if __name__ == "__main__":
+    run(CSV())

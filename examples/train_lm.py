@@ -1,0 +1,72 @@
+"""End-to-end LM training driver: data pipeline -> train_step -> checkpoints
+-> resume, on a CPU-runnable model from the assigned-arch families.
+
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2_130m --steps 120
+    # kill it mid-run and re-run: it resumes from the latest checkpoint.
+
+~20M params by default; --d-model/--layers scale it up (the dry-run covers
+the full-size configs).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.lm_pipeline import PrefetchingLoader, batch_at_step
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="mamba2_130m")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints/example_lm")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(
+        d_model=args.d_model,
+        n_layers=args.layers,
+        d_ff=args.d_model * 3 if get_config(args.arch).d_ff else 0,
+        vocab_size=4096,
+        head_dim=64,
+    )
+
+    def data_fn(step):
+        return batch_at_step(cfg, step, batch=args.batch, seq_len=args.seq, seed=0)
+
+    trainer = Trainer(
+        cfg,
+        TrainerConfig(
+            total_steps=args.steps,
+            checkpoint_every=max(args.steps // 4, 10),
+            checkpoint_dir=f"{args.ckpt_dir}/{args.arch}",
+            base_lr=args.lr,
+            async_checkpoint=True,
+        ),
+        data_fn,
+    )
+    _, _, start = trainer.init_or_restore()
+    from repro.utils import tree_param_count
+    params, _, _ = trainer.init_or_restore()[0], None, None
+    print(f"[train_lm] arch={args.arch} params={tree_param_count(params)/1e6:.1f}M "
+          f"start_step={start}")
+    t0 = time.time()
+    trainer.run()
+    n = len(trainer.history)
+    dt = time.time() - t0
+    print(f"[train_lm] {n} steps in {dt:.1f}s ({dt/max(n,1)*1000:.0f} ms/step)")
+    print(f"[train_lm] loss: {trainer.history[0]:.3f} -> {trainer.history[-1]:.3f} "
+          f"(copy-motif data is learnable; expect a clear drop)")
+    print(f"[train_lm] stragglers flagged: {len(trainer.monitor.stragglers)}; "
+          f"checkpoints: {trainer.ckpt.save_count} (async)")
+
+
+if __name__ == "__main__":
+    main()

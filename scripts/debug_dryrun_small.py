@@ -1,0 +1,76 @@
+"""Small-scale shakeout of the dry-run path: 8 host devices, reduced
+configs, tiny shapes — exercises the exact lower+compile code path."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import cells as cell_lib
+from repro.launch.cells import ShapeSpec
+from repro.models import sharding as sh
+from repro.training.train_step import make_prefill_step, make_serve_step, make_train_step
+from repro.launch.dryrun import _opt_shardings
+from repro.analysis import roofline as rf
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+SMALL_SHAPES = {
+    "train": ShapeSpec("train", "train", 64, 8),
+    "prefill": ShapeSpec("prefill", "prefill", 128, 8),
+    "decode": ShapeSpec("decode", "decode", 128, 8),
+}
+
+fails = 0
+for arch in ARCH_IDS:
+    cfg = get_config(arch).reduced(ssm_chunk=16)
+    for sname, shape in SMALL_SHAPES.items():
+        t0 = time.time()
+        try:
+            params_spec = cell_lib.params_spec_for(cfg)
+            with mesh:
+                if shape.kind == "train":
+                    pshard = sh.param_shardings(params_spec, mesh, fsdp=True)
+                    opt_spec = cell_lib.opt_spec_for(cfg, params_spec)
+                    oshard = _opt_shardings(opt_spec, params_spec, mesh, fsdp=True)
+                    batch_spec = cell_lib.batch_specs_for(cfg, shape)
+                    bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sh.batch_specs(batch_spec, mesh))
+                    step = make_train_step(cfg, microbatches=2)
+                    lowered = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                                      out_shardings=(pshard, oshard, None),
+                                      donate_argnums=(0, 1)).lower(params_spec, opt_spec, batch_spec)
+                elif shape.kind == "prefill":
+                    pshard = sh.param_shardings(params_spec, mesh, fsdp=False)
+                    batch_spec = cell_lib.batch_specs_for(cfg, shape)
+                    bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sh.batch_specs(batch_spec, mesh))
+                    step = make_prefill_step(cfg, max_seq=shape.seq_len)
+                    lowered = jax.jit(step, in_shardings=(pshard, bshard)).lower(params_spec, batch_spec)
+                else:
+                    pshard = sh.param_shardings(params_spec, mesh, fsdp=False)
+                    tokens_spec, cache_spec = cell_lib.decode_inputs_for(cfg, shape)
+                    cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sh.cache_specs(cache_spec, mesh))
+                    tshard = NamedSharding(mesh, P("data", None))
+                    step = make_serve_step(cfg)
+                    lowered = jax.jit(step, in_shardings=(pshard, tshard, cshard),
+                                      out_shardings=(None, None, cshard),
+                                      donate_argnums=(2,)).lower(params_spec, tokens_spec, cache_spec)
+                compiled = lowered.compile()
+                cost = compiled.cost_analysis()
+                hlo = compiled.as_text()
+                terms = rf.roofline_terms(cost, hlo)
+                print(f"OK   {arch:22s} {sname:8s} {time.time()-t0:5.1f}s "
+                      f"flops/dev={terms.flops_per_device:.2e} wire={terms.wire_bytes_per_device:.2e}")
+        except Exception as e:
+            fails += 1
+            print(f"FAIL {arch:22s} {sname:8s} {type(e).__name__}: {str(e)[:300]}")
+            traceback.print_exc(limit=3)
+
+print(f"\n{fails} failures")
+sys.exit(1 if fails else 0)

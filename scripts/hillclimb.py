@@ -1,0 +1,315 @@
+"""§Perf hillclimb driver: measure optimized variants of the three chosen
+cells against their recorded baselines (hypothesis -> change -> measure).
+
+Variants are expressed through config flags / sharding rules so the
+baseline lowering path is untouched (EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python scripts/hillclimb.py --cell kimi_train [--variant N]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses as dc
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as rf
+from repro.configs import get_config
+from repro.launch import cells as cell_lib
+from repro.launch.dryrun import _dp_axes, _opt_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as sh
+from repro.training.train_step import make_serve_step, make_train_step
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "perf"
+
+
+def measure_train(arch, cfg, mesh, rules, mb, accum_dtype, probe_depths=(2, 4)):
+    """Compile production (memory) + two-point probe (flops/collectives)."""
+    shape = cell_lib.SHAPES["train_4k"]
+
+    def lower(cfg_l, microbatches):
+        params_spec = cell_lib.params_spec_for(cfg_l)
+        pshard = sh.param_shardings(params_spec, mesh, fsdp=True, rules=rules)
+        opt_spec = cell_lib.opt_spec_for(cfg_l, params_spec)
+        oshard = _opt_shardings(opt_spec, params_spec, mesh, fsdp=True, rules=rules)
+        batch_spec = cell_lib.batch_specs_for(cfg_l, shape)
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), sh.batch_specs(batch_spec, mesh)
+        )
+        step = make_train_step(
+            cfg_l, microbatches=microbatches, dp_axes=_dp_axes(mesh),
+            accum_dtype=accum_dtype,
+        )
+        return jax.jit(
+            step, in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None), donate_argnums=(0, 1),
+        ).lower(params_spec, opt_spec, batch_spec)
+
+    act_rules = rules or sh.DEFAULT_RULES
+    with mesh, sh.activation_mesh(mesh, act_rules):
+        t0 = time.time()
+        compiled = lower(cfg, mb).compile()
+        mem = compiled.memory_analysis()
+        compile_s = time.time() - t0
+
+        # two-point probe
+        prefix = cfg.first_k_dense if cfg.n_experts else 0
+        L_main = cfg.n_layers - prefix
+        fs, tallies_pair = [], []
+        for Lk in probe_depths:
+            cfg_k = dc.replace(cfg, n_layers=Lk + prefix, scan_layers=False)
+            c = lower(cfg_k, 1).compile()
+            cost = c.cost_analysis()
+            fs.append(
+                (float(cost.get("flops", 0)), float(cost.get("bytes accessed", 0)))
+            )
+            tallies_pair.append(rf.parse_collectives(c.as_text()))
+    (f1, b1), (f2, b2) = fs
+    L1, L2 = probe_depths
+    scale = (L_main - L2) / (L2 - L1)
+    flops = f2 + (f2 - f1) * scale
+    bts = b2 + (b2 - b1) * scale
+    tallies = {
+        kind: {
+            k: tallies_pair[1][kind][k]
+            + (tallies_pair[1][kind][k] - tallies_pair[0][kind][k]) * scale
+            for k in tallies_pair[1][kind]
+        }
+        for kind in tallies_pair[1]
+    }
+    wire = sum(v["wire_bytes"] for v in tallies.values())
+    return {
+        "hbm_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9,
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "compile_s": round(compile_s, 1),
+        "compute_s": flops / rf.V5E["peak_flops"],
+        "memory_s": bts / rf.V5E["hbm_bw"],
+        "collective_s": wire / rf.V5E["ici_bw"],
+        "wire_gb": wire / 1e9,
+        "collectives": tallies,
+    }
+
+
+def measure_prefill(arch, cfg, mesh, rules, shape_name="prefill_32k"):
+    shape = cell_lib.SHAPES[shape_name]
+    from repro.training.train_step import make_prefill_step
+
+    def lower(cfg_l):
+        params_spec = cell_lib.params_spec_for(cfg_l)
+        pshard = sh.param_shardings(params_spec, mesh, fsdp=False, rules=rules)
+        batch_spec = cell_lib.batch_specs_for(cfg_l, shape)
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), sh.batch_specs(batch_spec, mesh)
+        )
+        step = make_prefill_step(cfg_l, max_seq=shape.seq_len)
+        return jax.jit(step, in_shardings=(pshard, bshard)).lower(
+            params_spec, batch_spec
+        )
+
+    act_rules = rules or sh.DEFAULT_RULES
+    with mesh, sh.activation_mesh(mesh, act_rules):
+        t0 = time.time()
+        compiled = lower(cfg).compile()
+        mem = compiled.memory_analysis()
+        compile_s = time.time() - t0
+        prefix = cfg.first_k_dense if cfg.n_experts else 0
+        L_main = cfg.n_layers - prefix
+        fs, tallies_pair = [], []
+        for Lk in (2, 4):
+            cfg_k = dc.replace(cfg, n_layers=Lk + prefix, scan_layers=False)
+            c = lower(cfg_k).compile()
+            cost = c.cost_analysis()
+            fs.append((float(cost.get("flops", 0)), float(cost.get("bytes accessed", 0))))
+            tallies_pair.append(rf.parse_collectives(c.as_text()))
+    (f1, b1), (f2, b2) = fs
+    scale = (L_main - 4) / 2
+    flops = f2 + (f2 - f1) * scale
+    bts = b2 + (b2 - b1) * scale
+    wire = sum(
+        t2["wire_bytes"] + (t2["wire_bytes"] - t1["wire_bytes"]) * scale
+        for t1, t2 in zip(tallies_pair[0].values(), tallies_pair[1].values())
+    )
+    return {
+        "hbm_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9,
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "compile_s": round(compile_s, 1),
+        "compute_s": flops / rf.V5E["peak_flops"],
+        "memory_s": bts / rf.V5E["hbm_bw"],
+        "collective_s": wire / rf.V5E["ici_bw"],
+        "wire_gb": wire / 1e9,
+    }
+
+
+def measure_decode(arch, cfg, mesh, rules, shape_name="decode_32k"):
+    shape = cell_lib.SHAPES[shape_name]
+
+    def lower(cfg_l):
+        params_spec = cell_lib.params_spec_for(cfg_l)
+        pshard = sh.param_shardings(params_spec, mesh, fsdp=False, rules=rules)
+        tokens_spec, cache_spec = cell_lib.decode_inputs_for(cfg_l, shape)
+        cshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), sh.cache_specs(cache_spec, mesh)
+        )
+        tspec = sh.spec_for(tokens_spec.shape, ("batch", None), mesh, sh.DEFAULT_RULES)
+        step = make_serve_step(cfg_l)
+        return jax.jit(
+            step,
+            in_shardings=(pshard, NamedSharding(mesh, tspec), cshard),
+            out_shardings=(None, None, cshard),
+            donate_argnums=(2,),
+        ).lower(params_spec, tokens_spec, cache_spec)
+
+    act_rules = rules or sh.DEFAULT_RULES
+    with mesh, sh.activation_mesh(mesh, act_rules):
+        t0 = time.time()
+        compiled = lower(cfg).compile()
+        mem = compiled.memory_analysis()
+        compile_s = time.time() - t0
+        prefix = cfg.first_k_dense if cfg.n_experts else 0
+        L_main = cfg.n_layers - prefix
+        fs, tallies_pair = [], []
+        for Lk in (2, 4):
+            cfg_k = dc.replace(cfg, n_layers=Lk + prefix, scan_layers=False)
+            c = lower(cfg_k).compile()
+            cost = c.cost_analysis()
+            fs.append((float(cost.get("flops", 0)), float(cost.get("bytes accessed", 0))))
+            tallies_pair.append(rf.parse_collectives(c.as_text()))
+    (f1, b1), (f2, b2) = fs
+    scale = (L_main - 4) / 2
+    flops = f2 + (f2 - f1) * scale
+    bts = b2 + (b2 - b1) * scale
+    tallies = {
+        kind: {
+            k: tallies_pair[1][kind][k]
+            + (tallies_pair[1][kind][k] - tallies_pair[0][kind][k]) * scale
+            for k in tallies_pair[1][kind]
+        }
+        for kind in tallies_pair[1]
+    }
+    wire = sum(v["wire_bytes"] for v in tallies.values())
+    return {
+        "hbm_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9,
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "compile_s": round(compile_s, 1),
+        "compute_s": flops / rf.V5E["peak_flops"],
+        "memory_s": bts / rf.V5E["hbm_bw"],
+        "collective_s": wire / rf.V5E["ici_bw"],
+        "wire_gb": wire / 1e9,
+    }
+
+
+def cell_kimi_train(variant: str):
+    mesh = make_production_mesh()
+    cfg = get_config("kimi_k2_1t_a32b")
+    if variant == "baseline":
+        return measure_train("kimi", cfg, mesh, None, 16, jnp.float32)
+    if variant == "accum_bf16":
+        return measure_train("kimi", cfg, mesh, None, 16, jnp.bfloat16)
+    if variant == "weight_stationary":
+        rules = sh.weight_stationary_moe_rules()
+        return measure_train("kimi", cfg, mesh, rules, 16, jnp.float32)
+    if variant == "combined":
+        rules = sh.weight_stationary_moe_rules()
+        return measure_train("kimi", cfg, mesh, rules, 16, jnp.bfloat16)
+    raise ValueError(variant)
+
+
+def cell_qwen_decode(variant: str):
+    mesh = make_production_mesh()
+    cfg = get_config("qwen2_72b")
+    if variant == "baseline":
+        return measure_decode("qwen", cfg, mesh, None)
+    if variant == "uniform_dus":
+        return measure_decode("qwen", dc.replace(cfg, ragged_decode=False), mesh, None)
+    if variant == "uniform_dus_mlpdata":
+        rules = dict(sh.DEFAULT_RULES)
+        rules["mlp"] = "data"
+        return measure_decode(
+            "qwen", dc.replace(cfg, ragged_decode=False), mesh, rules
+        )
+    raise ValueError(variant)
+
+
+def cell_hymba_prefill(variant: str):
+    mesh = make_production_mesh()
+    cfg = get_config("hymba_1_5b")
+    if variant == "baseline":
+        return measure_prefill("hymba", cfg, mesh, None)
+    if variant == "streaming":
+        return measure_prefill(
+            "hymba", dc.replace(cfg, streaming_attn_threshold=8192), mesh, None
+        )
+    if variant == "streaming_seqshard":
+        rules = dict(sh.DEFAULT_RULES)
+        rules["seq"] = "model"  # sequence-parallel activations (25 heads
+        # don't shard 16 ways; the seq dim does)
+        return measure_prefill(
+            "hymba", dc.replace(cfg, streaming_attn_threshold=8192), mesh, rules
+        )
+    raise ValueError(variant)
+
+
+def cell_qwen_prefill(variant: str):
+    mesh = make_production_mesh()
+    cfg = get_config("qwen2_72b")
+    if variant == "streaming":
+        return measure_prefill(
+            "qwen", dc.replace(cfg, streaming_attn_threshold=8192), mesh, None
+        )
+    raise ValueError(variant)
+
+
+CELLS = {
+    "kimi_train": (cell_kimi_train,
+                   ["baseline", "accum_bf16", "weight_stationary", "combined"]),
+    "qwen_decode": (cell_qwen_decode,
+                    ["baseline", "uniform_dus", "uniform_dus_mlpdata"]),
+    "hymba_prefill": (cell_hymba_prefill,
+                      ["baseline", "streaming", "streaming_seqshard"]),
+    "qwen_prefill": (cell_qwen_prefill, ["streaming"]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS), required=True)
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    fn, variants = CELLS[args.cell]
+    todo = [args.variant] if args.variant else variants
+    for v in todo:
+        out = OUT / f"{args.cell}__{v}.json"
+        if out.exists():
+            print(f"[skip] {out.name}")
+            continue
+        print(f"[hillclimb] {args.cell} / {v} ...", flush=True)
+        t0 = time.time()
+        try:
+            res = fn(v)
+            res["variant"] = v
+            res["wall_s"] = round(time.time() - t0, 1)
+            out.write_text(json.dumps(res, indent=2, default=str))
+            print(
+                f"[hillclimb] {args.cell}/{v}: hbm={res['hbm_gb']:.1f}GB "
+                f"coll={res['collective_s']:.3g}s mem={res['memory_s']:.3g}s "
+                f"comp={res['compute_s']:.3g}s", flush=True,
+            )
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            print(f"[hillclimb] {args.cell}/{v} FAILED: {e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

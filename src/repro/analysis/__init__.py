@@ -1,0 +1,15 @@
+from repro.analysis.roofline import (
+    RooflineTerms,
+    collective_bytes,
+    parse_collectives,
+    roofline_terms,
+    V5E,
+)
+
+__all__ = [
+    "RooflineTerms",
+    "collective_bytes",
+    "parse_collectives",
+    "roofline_terms",
+    "V5E",
+]

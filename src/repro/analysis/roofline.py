@@ -1,0 +1,227 @@
+"""Roofline-term derivation from compiled (dry-run) artifacts.
+
+Three terms per (arch x mesh), in seconds (brief §ROOFLINE):
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = wire_bytes_per_device / ICI_link_bandwidth
+
+HLO_FLOPs and HLO_bytes come from compiled.cost_analysis() (the SPMD
+program is per-device). Collective bytes are parsed from the optimized
+HLO text with ring-algorithm wire-cost factors:
+  all-reduce      2 x operand bytes
+  all-gather      ~output bytes (gathered size) x (N-1)/N  ≈ output bytes
+  reduce-scatter  ~input bytes x (N-1)/N                   ≈ input bytes
+  all-to-all      ~operand bytes
+  collective-permute  operand bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# TPU v5e hardware constants (brief)
+V5E = {
+    "peak_flops": 197e12,  # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,  # bytes/s
+    "ici_bw": 50e9,  # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every shape literal in an HLO result-type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind tallies: {kind: {count, result_bytes, wire_bytes}}.
+
+    Works on the optimized (post-SPMD) module: shapes are per-device.
+    """
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0}
+        for k in _COLLECTIVE_OPS
+    }
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVE_OPS:
+            # match ` <type> kind(` — avoid -start/-done fusion suffixes
+            opm = re.match(rf"^(\(?[\w\[\],\s{{}}]+\)?)\s+{kind}(-start)?\(", rhs)
+            if opm:
+                rbytes = _shape_bytes(opm.group(1))
+                if kind == "all-reduce":
+                    wire = 2.0 * rbytes
+                elif kind == "all-gather":
+                    wire = float(rbytes)  # result is the gathered size
+                elif kind == "reduce-scatter":
+                    # result is the scattered shard; input ~ result * N.
+                    # ring cost ~ input bytes: approximate with result*N is
+                    # unavailable without group size; use result bytes * 1
+                    # (conservative lower bound, noted in EXPERIMENTS.md).
+                    wire = float(rbytes)
+                else:
+                    wire = float(rbytes)
+                out[kind]["count"] += 1
+                out[kind]["result_bytes"] += rbytes
+                out[kind]["wire_bytes"] += wire
+                break
+    return out
+
+
+def collective_bytes(hlo_text: str) -> float:
+    tallies = parse_collectives(hlo_text)
+    return sum(v["wire_bytes"] for v in tallies.values())
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "dominant": self.dominant,
+            "collectives": self.collectives,
+        }
+
+
+def roofline_terms(
+    cost: Dict, hlo_text: str, hw: Dict = V5E
+) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    tallies = parse_collectives(hlo_text)
+    wire = sum(v["wire_bytes"] for v in tallies.values())
+    return RooflineTerms(
+        compute_s=flops / hw["peak_flops"],
+        memory_s=bytes_accessed / hw["hbm_bw"],
+        collective_s=wire / hw["ici_bw"],
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        wire_bytes_per_device=wire,
+        collectives=tallies,
+    )
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N = active params."""
+    n_active = active_params(cfg)
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch
+
+
+def active_params(cfg) -> float:
+    """Parameter count excluding non-routed experts (MoE: top-k active)."""
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    for i in range(L):
+        layer = 0
+        if cfg.family != "ssm":
+            layer += d * cfg.n_heads * hd * 2  # wq, wo
+            layer += d * cfg.n_kv_heads * hd * 2  # wk, wv
+        if cfg.family in ("ssm", "hybrid"):
+            di = cfg.d_inner
+            layer += d * (2 * di + 2 * cfg.ssm_state + cfg.ssm_heads)
+            layer += di * d
+        if cfg.is_moe_layer(i):
+            f = cfg.moe_d_ff or cfg.d_ff
+            layer += cfg.experts_per_token * 3 * d * f  # active experts only
+            layer += cfg.n_shared_experts * 3 * d * f
+            if cfg.moe_dense_residual:
+                layer += 3 * d * cfg.d_ff
+        elif cfg.d_ff:
+            layer += 3 * d * cfg.d_ff
+        total += layer
+    if cfg.n_enc_layers:
+        enc_layer = d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2 + 3 * d * cfg.d_ff
+        total += cfg.n_enc_layers * enc_layer
+        total += L * (d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2)  # cross
+    return float(total)
+
+
+def total_params(cfg) -> float:
+    """All parameters (MoE: every expert)."""
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    for i in range(L):
+        layer = 0
+        if cfg.family != "ssm":
+            layer += d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2
+        if cfg.family in ("ssm", "hybrid"):
+            di = cfg.d_inner
+            layer += d * (2 * di + 2 * cfg.ssm_state + cfg.ssm_heads) + di * d
+        if cfg.is_moe_layer(i):
+            f = cfg.moe_d_ff or cfg.d_ff
+            layer += cfg.n_experts * 3 * d * f + cfg.n_shared_experts * 3 * d * f
+            if cfg.moe_dense_residual:
+                layer += 3 * d * cfg.d_ff
+        elif cfg.d_ff:
+            layer += 3 * d * cfg.d_ff
+        total += layer
+    if cfg.n_enc_layers:
+        enc_layer = d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2 + 3 * d * cfg.d_ff
+        total += cfg.n_enc_layers * enc_layer
+        total += L * (d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2)
+    return float(total)

@@ -1,0 +1,177 @@
+"""Fault-tolerant checkpointing (DESIGN.md §6).
+
+Design goals (what a real fleet needs, scaled to this repo):
+  * ATOMIC commits: write to a temp dir, fsync, rename — a crash mid-save
+    never corrupts the latest checkpoint;
+  * mesh-agnostic layout: full logical arrays are saved (gathered), so a
+    checkpoint written on a 16x16 mesh restores onto 8x8 or 1 device —
+    the elastic re-mesh path;
+  * rotation with retention, resume-from-latest;
+  * async save thread: the train loop donates a host copy and keeps
+    stepping while the previous checkpoint serializes (straggler hiding).
+
+Format: one .npz per top-level param group + JSON manifest with step,
+tree structure, and integrity digests.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+_NATIVE_KINDS = set("fiub")  # float/int/uint/bool numpy kinds
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+            for e in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in _NATIVE_KINDS or arr.dtype.name == "bfloat16":
+            # npz cannot round-trip extension dtypes (bf16): widen to f32;
+            # the template dtype restores it on load.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, tleaf in paths:
+        key = "/".join(
+            str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+            for e in path
+        )
+        arr = flat[key]
+        if hasattr(tleaf, "dtype") and str(arr.dtype) != str(tleaf.dtype):
+            import jax.numpy as jnp
+
+            arr = np.asarray(jnp.asarray(arr).astype(tleaf.dtype))
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(directory: str | Path, step: int, state: Dict[str, Any]) -> Path:
+    """Atomic checkpoint save. ``state`` is a dict of named pytrees."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:010d}"
+    tmp = Path(tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=directory))
+    manifest = {"step": step, "groups": {}, "time": time.time()}
+    try:
+        for name, tree in state.items():
+            flat = _flatten_with_paths(tree)
+            fname = f"{name}.npz"
+            np.savez(tmp / fname, **flat)
+            digest = hashlib.sha256((tmp / fname).read_bytes()).hexdigest()[:16]
+            manifest["groups"][name] = {"file": fname, "sha256_16": digest}
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        with open(tmp / "manifest.json") as f:
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def _verify(path: Path) -> bool:
+    try:
+        manifest = json.loads((path / "manifest.json").read_text())
+        for name, info in manifest["groups"].items():
+            digest = hashlib.sha256((path / info["file"]).read_bytes()).hexdigest()[:16]
+            if digest != info["sha256_16"]:
+                return False
+        return True
+    except Exception:
+        return False
+
+
+def load_latest(directory: str | Path, templates: Dict[str, Any]):
+    """Restore the newest valid checkpoint; returns (step, state) or None.
+
+    Corrupt/partial checkpoints (failed integrity check) are skipped —
+    the restart path after a mid-save crash.
+    """
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    candidates = sorted(
+        (d for d in directory.iterdir() if d.name.startswith("step_")), reverse=True
+    )
+    for cand in candidates:
+        if not _verify(cand):
+            continue
+        manifest = json.loads((cand / "manifest.json").read_text())
+        state = {}
+        for name, template in templates.items():
+            data = np.load(cand / manifest["groups"][name]["file"])
+            state[name] = _unflatten_like(template, dict(data))
+        return manifest["step"], state
+    return None
+
+
+class CheckpointManager:
+    """Rotation + optional async (background-thread) saves."""
+
+    def __init__(
+        self,
+        directory: str | Path,
+        *,
+        keep: int = 3,
+        async_save: bool = False,
+    ):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self.save_count = 0
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, state: Dict[str, Any]):
+        # snapshot to host BEFORE returning control (donation safety)
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def _do():
+            save_checkpoint(self.directory, step, host_state)
+            self._rotate()
+
+        self.save_count += 1
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def restore(self, templates: Dict[str, Any]):
+        self.wait()
+        return load_latest(self.directory, templates)
+
+    def _rotate(self):
+        ckpts = sorted(
+            d for d in self.directory.iterdir() if d.name.startswith("step_")
+        )
+        for old in ckpts[: -self.keep]:
+            shutil.rmtree(old, ignore_errors=True)

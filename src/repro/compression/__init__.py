@@ -1,0 +1,7 @@
+from repro.compression.topk import (
+    CompressionState,
+    compress_decompress,
+    init_compression,
+)
+
+__all__ = ["CompressionState", "compress_decompress", "init_compression"]

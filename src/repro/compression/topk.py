@@ -1,0 +1,69 @@
+"""Top-k gradient compression with error feedback (DESIGN.md §6).
+
+For bandwidth-limited DP all-reduces: transmit only the top-k magnitude
+entries per leaf, accumulate the residual locally (error feedback, Stich
+et al. 2018) so the compression error is re-injected on later steps —
+convergence is preserved while wire bytes drop by ~p/k.
+
+Under GSPMD the all-reduce is implicit; the transform is exposed both as
+a pure function (tested for the EF invariant) and as a shard_map DP
+example (examples/compressed_dp.py) where the psum really does see the
+sparse values.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any  # per-leaf residual (error feedback memory)
+
+
+def init_compression(grads) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    )
+
+
+def _topk_mask(x: jax.Array, k: int) -> jax.Array:
+    flat = jnp.abs(x.reshape(-1))
+    if k >= flat.shape[0]:
+        return jnp.ones_like(x, bool)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh) & (jnp.abs(x) > 0)
+
+
+def compress_decompress(
+    grads,
+    state: CompressionState,
+    ratio: float = 0.01,
+    min_k: int = 16,
+) -> Tuple[Any, CompressionState]:
+    """Returns (sparse grads ready for all-reduce, new error state)."""
+
+    def leaf(g, e):
+        gf = g.astype(jnp.float32) + e  # error feedback injection
+        k = max(int(ratio * gf.size), min(min_k, gf.size))
+        mask = _topk_mask(gf, k)
+        sent = jnp.where(mask, gf, 0.0)
+        new_err = gf - sent
+        return sent.astype(g.dtype), new_err
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    sparse = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    errors = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return sparse, CompressionState(error=errors)
+
+
+def wire_bytes_saved(grads, ratio: float) -> Tuple[int, int]:
+    """(dense_bytes, compressed_bytes) — index+value encoding estimate."""
+    dense = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    comp = sum(
+        max(int(ratio * g.size), 16) * 8 for g in jax.tree.leaves(grads)
+    )  # 4B value + 4B index
+    return dense, comp

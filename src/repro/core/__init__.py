@@ -1,0 +1,35 @@
+"""Core: the paper's contribution — stochastic Frank-Wolfe for the Lasso."""
+from repro.core.fw_lasso import (
+    ColStats,
+    FWResult,
+    FWState,
+    duality_gap,
+    fw_solve,
+    fw_solve_with_history,
+    fw_step,
+    init_state,
+    objective,
+    precompute_colstats,
+)
+from repro.core.solver_config import CDConfig, FISTAConfig, FWConfig
+from repro.core import baselines, path, projections, sampling
+
+__all__ = [
+    "ColStats",
+    "FWResult",
+    "FWState",
+    "FWConfig",
+    "CDConfig",
+    "FISTAConfig",
+    "duality_gap",
+    "fw_solve",
+    "fw_solve_with_history",
+    "fw_step",
+    "init_state",
+    "objective",
+    "precompute_colstats",
+    "baselines",
+    "path",
+    "projections",
+    "sampling",
+]

@@ -1,0 +1,314 @@
+"""Stochastic Frank-Wolfe for the constrained Lasso (paper Algorithm 2).
+
+Implements the randomized FW iteration of Frandi et al. (2015):
+
+    min_alpha f(alpha) = 1/2 ||X alpha - y||^2   s.t.  ||alpha||_1 <= delta
+
+Key paper mechanics reproduced faithfully:
+  * method of residuals (eq. 7): sampled gradient coords are -z_i^T R,
+  * closed-form exact line search (eq. 8) with the S/F scalar recursions,
+  * residual update (eq. 10),
+  * uniform random coordinate sampling (Lemma 1 / Prop. 2),
+  * per-iteration cost O(kappa * m), independent of p.
+
+Implementation notes (beyond the paper, recorded in DESIGN.md):
+  * the design matrix is stored FEATURE-MAJOR: ``Xt`` has shape (p, m), so
+    one predictor z_i = Xt[i] is a contiguous row and the sampled-gradient
+    gather touches kappa contiguous stripes (this is also the layout the
+    TPU kernel tiles over);
+  * the iterate is stored as ``alpha = scale * beta`` so the (1-lambda)
+    shrink of every coordinate is O(1) instead of O(p);
+  * block sampling (contiguous aligned blocks of coordinates) is provided
+    as the TPU-native sampling mode — Lemma 1 only needs P(i in S) = kappa/p,
+    which uniform aligned-block sampling preserves when bs | p;
+  * a running upper bound on ||alpha||_inf gives the paper's
+    ||alpha^{k+1} - alpha^k||_inf <= eps stopping rule without O(p) work.
+    Because a sampled iteration can legitimately produce lambda = 0 (the
+    sample contained no descent vertex), the rule only fires after
+    ``patience`` consecutive sub-tolerance steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver_config import FWConfig
+
+
+class ColStats(NamedTuple):
+    """Per-column statistics precomputed once before the iterations (§4.2)."""
+
+    zty: jax.Array  # (p,)  z_i^T y
+    znorm2: jax.Array  # (p,)  ||z_i||^2
+    yty: jax.Array  # ()    y^T y
+
+
+class FWState(NamedTuple):
+    """Loop state. ``alpha = scale * beta`` (scaled representation)."""
+
+    beta: jax.Array  # (p,) unscaled coefficients
+    scale: jax.Array  # ()  multiplicative scale
+    resid: jax.Array  # (m,) R = y - X alpha
+    s_quad: jax.Array  # ()  S^k = ||X alpha||^2
+    f_lin: jax.Array  # ()  F^k = (X alpha)^T y
+    maxabs: jax.Array  # ()  running upper bound on ||alpha||_inf
+    step_inf: jax.Array  # ()  ||alpha^{k+1} - alpha^k||_inf (bound)
+    stall: jax.Array  # ()  consecutive sub-tolerance steps
+    n_dots: jax.Array  # ()  length-m dot products consumed so far
+    k: jax.Array  # ()  iteration counter
+    key: jax.Array  # PRNG key
+
+
+class FWResult(NamedTuple):
+    alpha: jax.Array
+    objective: jax.Array
+    iterations: jax.Array
+    n_dots: jax.Array
+    active: jax.Array  # () number of nonzero coefficients
+    converged: jax.Array
+
+
+def precompute_colstats(Xt: jax.Array, y: jax.Array) -> ColStats:
+    """One full pass over X: z_i^T y and ||z_i||^2 for every column (§4.2)."""
+    zty = Xt @ y
+    znorm2 = jnp.sum(Xt * Xt, axis=1)
+    return ColStats(zty=zty, znorm2=znorm2, yty=jnp.dot(y, y))
+
+
+def init_state(
+    Xt: jax.Array,
+    y: jax.Array,
+    key: jax.Array,
+    alpha0: Optional[jax.Array] = None,
+) -> FWState:
+    """Start from the null solution, or warm-start from ``alpha0``."""
+    p = Xt.shape[0]
+    if alpha0 is None:
+        beta = jnp.zeros((p,), Xt.dtype)
+        resid = y.astype(Xt.dtype)
+        s_quad = jnp.zeros((), Xt.dtype)
+        f_lin = jnp.zeros((), Xt.dtype)
+        maxabs = jnp.zeros((), Xt.dtype)
+    else:
+        beta = alpha0.astype(Xt.dtype)
+        v = beta @ Xt  # X alpha
+        resid = y - v
+        s_quad = jnp.dot(v, v)
+        f_lin = jnp.dot(v, y)
+        maxabs = jnp.max(jnp.abs(beta))
+    return FWState(
+        beta=beta,
+        scale=jnp.ones((), Xt.dtype),
+        resid=resid,
+        s_quad=s_quad,
+        f_lin=f_lin,
+        maxabs=maxabs,
+        step_inf=jnp.full((), jnp.inf, Xt.dtype),
+        stall=jnp.zeros((), jnp.int32),
+        n_dots=jnp.zeros((), jnp.int32),
+        k=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+def _sample_indices(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
+    """Draw the sampling set S (paper §4.1 / §4.5).
+
+    'uniform': kappa i.i.d. uniform draws (with replacement — O(kappa), the
+       large-p-friendly reading of the paper's uniform kappa-subsets).
+    'block':   kappa/block aligned blocks without replacement (TPU-native).
+    'full':    deterministic FW (S = {1..p}).
+    """
+    if cfg.sampling == "full":
+        return jnp.arange(p)
+    if cfg.sampling == "uniform":
+        return jax.random.randint(key, (cfg.kappa,), 0, p)
+    if cfg.sampling == "block":
+        bs = cfg.block_size
+        nblocks = max(cfg.kappa // bs, 1)
+        total = -(-p // bs)  # ceil; tail block wraps (documented in DESIGN.md)
+        starts = jax.random.choice(key, total, (nblocks,), replace=False)
+        idx = starts[:, None] * bs + jnp.arange(bs)[None, :]
+        return idx.reshape(-1) % p
+    raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
+
+
+def fw_step(
+    Xt: jax.Array,
+    y: jax.Array,
+    stats: ColStats,
+    state: FWState,
+    cfg: FWConfig,
+    delta=None,
+) -> FWState:
+    """One randomized Frank-Wolfe step (paper Algorithm 2).
+
+    ``delta`` may be a traced array: the l1 radius enters the math only
+    through scalar formulas, so keeping it dynamic lets a whole
+    regularization path reuse ONE compiled solver (§Perf).
+    """
+    p = Xt.shape[0]
+    delta = cfg.delta if delta is None else delta
+    key, sub = jax.random.split(state.key)
+    idx = _sample_indices(sub, p, cfg)
+
+    # -- step 2: method of residuals on the sampled coordinates (eq. 7) ----
+    rows = jnp.take(Xt, idx, axis=0)  # (|S|, m) contiguous row gather
+    grad_s = -(rows @ state.resid)  # (|S|,)
+
+    j = jnp.argmax(jnp.abs(grad_s))
+    i_star = idx[j]
+    g_star = grad_s[j]
+
+    # -- step 3: FW vertex sign (eq. 6) -------------------------------------
+    delta_t = -delta * jnp.sign(g_star)  # delta-tilde
+
+    # -- step 4: closed-form exact line search (eq. 8) ----------------------
+    g_lin = g_star + stats.zty[i_star]  # G_{i*} = z_{i*}^T (X alpha)
+    num = state.s_quad - delta_t * g_star - state.f_lin
+    den = state.s_quad - 2.0 * delta_t * g_lin + delta_t**2 * stats.znorm2[i_star]
+    lam = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, 1.0)
+
+    # -- step 5: coefficient update in scaled representation ---------------
+    one_m = 1.0 - lam
+    alpha_istar_old = state.scale * state.beta[i_star]
+    new_scale = state.scale * one_m
+    # renormalize when the scale underflows (rare O(p) event)
+    need_renorm = new_scale < cfg.renorm_threshold
+    beta, scale = jax.lax.cond(
+        need_renorm,
+        lambda b, s: (b * s, jnp.ones((), Xt.dtype)),
+        lambda b, s: (b, s),
+        state.beta,
+        new_scale,
+    )
+    beta = beta.at[i_star].add(delta_t * lam / jnp.maximum(scale, cfg.eps_den))
+
+    # -- step 6: residual update (eq. 10) -----------------------------------
+    z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
+    resid = one_m * state.resid + lam * (y - delta_t * z_star)
+
+    # -- S/F scalar recursions (paper, below eq. 8) --------------------------
+    s_quad = (
+        one_m**2 * state.s_quad
+        + 2.0 * delta_t * lam * one_m * g_lin
+        + delta_t**2 * lam**2 * stats.znorm2[i_star]
+    )
+    f_lin = one_m * state.f_lin + delta_t * lam * stats.zty[i_star]
+
+    # fp32-drift control: periodically recompute S/F exactly from the
+    # residual (v = y - R), an O(m) refresh — see DESIGN.md.
+    refresh = (state.k % cfg.refresh_every) == (cfg.refresh_every - 1)
+    v = y - resid
+    s_quad = jnp.where(refresh, jnp.dot(v, v), s_quad)
+    f_lin = jnp.where(refresh, jnp.dot(v, y), f_lin)
+
+    # -- stopping statistic: ||alpha_{k+1} - alpha_k||_inf upper bound ------
+    alpha_istar_new = scale * beta[i_star]
+    step_inf = lam * jnp.maximum(state.maxabs, jnp.abs(delta_t - alpha_istar_old))
+    maxabs = jnp.maximum(one_m * state.maxabs, jnp.abs(alpha_istar_new))
+    stall = jnp.where(step_inf <= cfg.tol, state.stall + 1, 0)
+
+    return FWState(
+        beta=beta,
+        scale=scale,
+        resid=resid,
+        s_quad=s_quad,
+        f_lin=f_lin,
+        maxabs=maxabs,
+        step_inf=step_inf,
+        stall=stall,
+        n_dots=state.n_dots + idx.shape[0],
+        k=state.k + 1,
+        key=key,
+    )
+
+
+def objective(stats: ColStats, state: FWState) -> jax.Array:
+    """f(alpha^k) = 1/2 y^T y + 1/2 S^k - F^k (paper eq. 8 block)."""
+    return 0.5 * stats.yty + 0.5 * state.s_quad - state.f_lin
+
+
+def duality_gap(Xt: jax.Array, state: FWState, delta: float) -> jax.Array:
+    """Exact FW duality gap g(alpha) = alpha^T grad + delta*||grad||_inf.
+
+    O(m p) — used for certification / tests, not inside the hot loop.
+    """
+    alpha = state.scale * state.beta
+    grad = -(Xt @ state.resid)
+    return jnp.dot(alpha, grad) + delta * jnp.max(jnp.abs(grad))
+
+
+def _patience(cfg: FWConfig) -> int:
+    return cfg.patience if cfg.sampling != "full" else 1
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def fw_solve(
+    Xt: jax.Array,
+    y: jax.Array,
+    cfg: FWConfig,
+    key: jax.Array,
+    alpha0: Optional[jax.Array] = None,
+    delta=None,
+) -> FWResult:
+    """Run Algorithm 2 until ||alpha_{k+1}-alpha_k||_inf <= tol for
+    ``patience`` consecutive iterations, or max_iters. ``delta`` (traced)
+    overrides cfg.delta — one compile serves the whole path."""
+    delta = jnp.asarray(cfg.delta if delta is None else delta)
+    stats = precompute_colstats(Xt, y)
+    state0 = init_state(Xt, y, key, alpha0)
+    patience = _patience(cfg)
+
+    def cond(state: FWState):
+        return (state.k < cfg.max_iters) & (state.stall < patience)
+
+    def body(state: FWState):
+        return fw_step(Xt, y, stats, state, cfg, delta)
+
+    final = jax.lax.while_loop(cond, body, state0)
+    alpha = final.scale * final.beta
+    return FWResult(
+        alpha=alpha,
+        objective=objective(stats, final),
+        iterations=final.k,
+        n_dots=final.n_dots,
+        active=jnp.sum(alpha != 0.0),
+        converged=final.stall >= patience,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_iters"))
+def fw_solve_with_history(
+    Xt: jax.Array,
+    y: jax.Array,
+    cfg: FWConfig,
+    key: jax.Array,
+    n_iters: int,
+    alpha0: Optional[jax.Array] = None,
+):
+    """Fixed-iteration run recording f(alpha^k) per step (convergence plots).
+
+    Returns (result, objective_history[n_iters]).
+    """
+    stats = precompute_colstats(Xt, y)
+    state0 = init_state(Xt, y, key, alpha0)
+
+    def body(state, _):
+        new = fw_step(Xt, y, stats, state, cfg, jnp.asarray(cfg.delta))
+        return new, objective(stats, new)
+
+    final, hist = jax.lax.scan(body, state0, None, length=n_iters)
+    alpha = final.scale * final.beta
+    res = FWResult(
+        alpha=alpha,
+        objective=objective(stats, final),
+        iterations=final.k,
+        n_dots=final.n_dots,
+        active=jnp.sum(alpha != 0.0),
+        converged=final.stall >= _patience(cfg),
+    )
+    return res, hist

@@ -1,0 +1,51 @@
+"""Hashable solver configs (static args to jitted solver entry points)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FWConfig:
+    """Configuration of the stochastic Frank-Wolfe Lasso solver.
+
+    Attributes:
+      delta: l1-ball radius (constrained formulation, paper eq. 1).
+      kappa: sampling-set size |S| (paper §4.5).
+      sampling: 'uniform' (paper), 'block' (TPU-native, DESIGN.md §4),
+        or 'full' (deterministic FW).
+      block_size: aligned block width for 'block' sampling.
+      max_iters / tol: the paper's ||alpha^{k+1}-alpha^k||_inf <= eps rule.
+    """
+
+    delta: float
+    kappa: int = 194  # paper's top-2%/98% confidence default
+    sampling: str = "uniform"
+    block_size: int = 128
+    max_iters: int = 50_000
+    tol: float = 1e-3
+    patience: int = 20  # consecutive sub-tol steps before stopping (stochastic)
+    refresh_every: int = 64  # recompute S/F from residuals (fp32 drift control)
+    eps_den: float = 1e-12
+    renorm_threshold: float = 1e-6
+
+
+@dataclass(frozen=True)
+class CDConfig:
+    """Cyclic / stochastic coordinate descent (penalized form, Glmnet-style)."""
+
+    lam: float
+    max_sweeps: int = 1000
+    tol: float = 1e-3
+    stochastic: bool = False
+
+
+@dataclass(frozen=True)
+class FISTAConfig:
+    """FISTA on the penalized form; 'constrained' switches to l1-ball projection."""
+
+    lam: float = 0.0
+    delta: float = 0.0
+    constrained: bool = False
+    max_iters: int = 2000
+    tol: float = 1e-3
+    power_iters: int = 50  # Lipschitz estimation

@@ -1,0 +1,4 @@
+from repro.data.synthetic import make_regression, standardize
+from repro.data.proxies import make_proxy, PROXY_SPECS
+
+__all__ = ["make_regression", "standardize", "make_proxy", "PROXY_SPECS"]

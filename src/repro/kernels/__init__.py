@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the FW-Lasso hot loop (validated in interpret
+mode on CPU; enabled on real TPUs via FWConfig/solver flags).
+
+fw_grad:          sampled column-block scores (scalar-prefetch gather)
+residual_update:  fused R <- (1-lam) R + lam (y - dt z)
+colstats:         fused z^T y and ||z||^2 setup pass
+"""
+from repro.kernels.fw_grad.ops import fw_vertex
+from repro.kernels.fw_grad.fw_grad import sampled_scores
+from repro.kernels.residual_update.residual_update import residual_update
+from repro.kernels.colstats.colstats import colstats
+
+__all__ = ["fw_vertex", "sampled_scores", "residual_update", "colstats"]

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused setup pass over the design matrix (§4.2).
+
+Computes both per-predictor statistics the solver precomputes once,
+
+    zty[i]    = Xt[i, :] @ y
+    znorm2[i] = ||Xt[i, :]||^2
+
+in a single sweep over Xt (one HBM read instead of two).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, zty_ref, zn2_ref):
+    j = pl.program_id(1)
+    x = x_ref[...]
+    dot = jnp.dot(x, y_ref[0, :], preferred_element_type=jnp.float32)
+    sq = jnp.sum(x.astype(jnp.float32) * x, axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        zty_ref[0, :] = dot
+        zn2_ref[0, :] = sq
+
+    @pl.when(j > 0)
+    def _acc():
+        zty_ref[0, :] = zty_ref[0, :] + dot
+        zn2_ref[0, :] = zn2_ref[0, :] + sq
+
+
+@functools.partial(jax.jit, static_argnames=("p_tile", "m_tile", "interpret"))
+def colstats(
+    Xt: jax.Array,  # (p, m)
+    y: jax.Array,  # (m,)
+    *,
+    p_tile: int = 256,
+    m_tile: int = 512,
+    interpret: bool = False,
+):
+    p, m = Xt.shape
+    assert p % p_tile == 0, (p, p_tile)
+    if m % m_tile != 0:
+        m_tile = m
+    grid = (p // p_tile, m // m_tile)
+    zty, zn2 = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p_tile, m_tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1, m_tile), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, p_tile), lambda i, j: (0, i)),
+            pl.BlockSpec((1, p_tile), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, p), jnp.float32),
+            jax.ShapeDtypeStruct((1, p), jnp.float32),
+        ],
+        interpret=interpret,
+        name="fw_colstats",
+    )(Xt, y.reshape(1, m))
+    return zty.reshape(p), zn2.reshape(p)

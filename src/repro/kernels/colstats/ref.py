@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused column-stats pass."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def colstats_ref(Xt, y):
+    return Xt @ y, jnp.sum(Xt.astype(jnp.float32) * Xt, axis=1)

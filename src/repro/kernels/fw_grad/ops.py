@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for the sampled FW-score kernel.
+
+``fw_vertex(Xt, r, blk)`` returns (i_star, g_star): the sampled FW vertex
+(paper eq. 9) — global coordinate index and its gradient value. The Pallas
+kernel produces the fused gathered-block scores; the O(kappa) argmax runs
+in XLA. On CPU the kernel executes in interpret mode (TPU is the target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fw_grad.fw_grad import sampled_scores
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "m_tile", "interpret")
+)
+def fw_vertex(
+    Xt: jax.Array,
+    r: jax.Array,
+    blk: jax.Array,
+    *,
+    block_size: int = 256,
+    m_tile: int = 512,
+    interpret: bool = False,
+):
+    scores = sampled_scores(
+        Xt, r, blk, block_size=block_size, m_tile=m_tile, interpret=interpret
+    )
+    idx = (blk[:, None] * block_size + jnp.arange(block_size)[None, :]).reshape(-1)
+    j = jnp.argmax(jnp.abs(scores))
+    return idx[j], scores[j]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the sampled block-gradient kernel.
+
+Given the feature-major design matrix Xt (p, m), residual r (m,), and a
+set of sampled block indices blk (nb,), block size bs: compute the FW
+scores for the sampled coordinates,
+
+    scores[i*bs + t] = - Xt[blk[i]*bs + t, :] @ r
+
+and the (argmax |score|, score) pair over the sample (paper eq. 9).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sampled_scores_ref(Xt, r, blk, block_size: int):
+    idx = (blk[:, None] * block_size + jnp.arange(block_size)[None, :]).reshape(-1)
+    rows = jnp.take(Xt, idx, axis=0)  # (nb*bs, m)
+    return -(rows @ r), idx
+
+
+def sampled_argmax_ref(Xt, r, blk, block_size: int):
+    scores, idx = sampled_scores_ref(Xt, r, blk, block_size)
+    j = jnp.argmax(jnp.abs(scores))
+    return idx[j], scores[j]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused residual update (paper eq. 10)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def residual_update_ref(r, y, z, lam, delta_t):
+    return (1.0 - lam) * r + lam * (y - delta_t * z)

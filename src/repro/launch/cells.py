@@ -1,0 +1,129 @@
+"""The (architecture x input-shape) cell plan for the multi-pod dry-run.
+
+Four LM shapes (brief):
+  train_4k    seq 4096,   global_batch 256   -> train_step
+  prefill_32k seq 32768,  global_batch 32    -> prefill
+  decode_32k  cache 32768, global_batch 128  -> serve_step (1 new token)
+  long_500k   cache 524288, global_batch 1   -> serve_step; SSM/hybrid only
+
+Per-cell knobs (microbatches, FSDP, MoE serve sharding) are the
+production-tuning surface; they are recorded in EXPERIMENTS.md per cell.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# microbatch counts for train_4k, sized so scan-over-layers carries stay
+# within a few GB/device at dp=16 (see DESIGN.md §5)
+TRAIN_MICROBATCHES: Dict[str, int] = {
+    "mamba2_130m": 1,
+    "internlm2_20b": 16,
+    "deepseek_7b": 8,
+    "gemma2_9b": 8,
+    "qwen2_72b": 16,
+    "internvl2_76b": 16,
+    "arctic_480b": 16,
+    "kimi_k2_1t_a32b": 16,
+    "hymba_1_5b": 4,
+    "seamless_m4t_medium": 2,
+}
+
+# MoE/huge archs shard the expert/mlp dim over 'data' too while serving so
+# bf16 params fit 16GB/chip (DESIGN.md §5)
+SERVE_MLP_DATA = {"arctic_480b", "kimi_k2_1t_a32b", "internvl2_76b"}
+
+
+def cell_skip_reason(arch: str, shape: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return "full-attention arch: 500k decode is quadratic-regime (DESIGN.md)"
+    return None
+
+
+def iter_cells():
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            yield arch, shape, cell_skip_reason(arch, shape)
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs_for(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """Training/prefill batch ShapeDtypeStructs."""
+    B = shape.global_batch
+    S = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch = {}
+    if shape.kind == "train":
+        batch["tokens"] = _sds((B, S + 1), jnp.int32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if cfg.n_prefix_embeds:
+        batch["patches"] = _sds((B, cfg.n_prefix_embeds, cfg.d_model), dt)
+    if cfg.n_enc_layers:
+        # encoder memory length: full seq for training, capped for serving
+        enc_len = S if shape.kind == "train" else min(S, 4096)
+        batch["frames"] = _sds((B, enc_len, cfg.d_model), dt)
+    return batch
+
+
+def decode_inputs_for(cfg: ModelConfig, shape: ShapeSpec):
+    """(tokens, cache) ShapeDtypeStructs for serve_step."""
+    from repro.models import model as model_lib
+
+    B, S = shape.global_batch, shape.seq_len
+    tokens = _sds((B, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, B, S, dtype=cfg.dtype)
+    )
+    if cfg.n_enc_layers:
+        cache = dict(cache)
+        cache["memory"] = _sds((B, min(S, 4096), cfg.d_model), jnp.dtype(cfg.dtype))
+    return tokens, cache
+
+
+def params_spec_for(cfg: ModelConfig):
+    from repro.models import model as model_lib
+
+    return jax.eval_shape(
+        lambda k: model_lib.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+
+
+def opt_spec_for(cfg: ModelConfig, params_spec):
+    from repro.training import optimizers as opt_lib
+
+    return jax.eval_shape(
+        lambda p: opt_lib.init_optimizer(cfg.optimizer, p), params_spec
+    )

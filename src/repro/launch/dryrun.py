@@ -1,0 +1,353 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder CPU devices, record memory/cost analysis + collective
+tallies for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod both]
+Outputs JSON per cell under experiments/dryrun/.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as rf
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import cells as cell_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as sh
+from repro.models.config import ModelConfig
+from repro.training import optimizers as opt_lib
+from repro.training.train_step import make_serve_step, make_train_step, make_prefill_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _opt_shardings(opt_spec, params_spec, mesh, fsdp, rules=None):
+    """Optimizer-state shardings derived from the param specs."""
+    pspecs = sh.param_specs(params_spec, mesh, fsdp=fsdp, rules=rules)
+
+    def leaf(ospec_leaf_path, oleaf):
+        return None  # placeholder, replaced below
+
+    # AdamLeaf(m, v, master): same spec as param. FactorLeaf: reduced dims.
+    def map_state(pspec, state_leaf):
+        if isinstance(state_leaf, opt_lib.AdamLeaf):
+            ns = NamedSharding(mesh, pspec)
+            master_ns = (
+                ns
+                if state_leaf.master.ndim == len(pspec)
+                else NamedSharding(mesh, P(None))  # fp32 placeholder master
+            )
+            return opt_lib.AdamLeaf(m=ns, v=ns, master=master_ns)
+        if isinstance(state_leaf, opt_lib.FactorLeaf):
+            parts = list(pspec)
+            row = P(*parts[:-1]) if state_leaf.v_row.ndim == len(parts) - 1 else P()
+            col = (
+                P(*(parts[:-2] + parts[-1:]))
+                if state_leaf.v_col.ndim == len(parts) - 1
+                else P()
+            )
+            full = P(*parts) if state_leaf.v_full.ndim == len(parts) else P()
+            return opt_lib.FactorLeaf(
+                v_row=NamedSharding(mesh, row),
+                v_col=NamedSharding(mesh, col),
+                v_full=NamedSharding(mesh, full),
+            )
+        raise TypeError(type(state_leaf))
+
+    inner = jax.tree.map(
+        map_state,
+        pspecs,
+        opt_spec.inner,
+        is_leaf=lambda x: isinstance(x, (opt_lib.AdamLeaf, opt_lib.FactorLeaf)),
+    )
+    return opt_lib.OptState(
+        step=NamedSharding(mesh, P()),
+        inner=inner,
+    )
+
+
+def _serve_rules(arch: str):
+    if arch in cell_lib.SERVE_MLP_DATA:
+        rules = dict(sh.DEFAULT_RULES)
+        rules["mlp"] = "data"
+        rules["moe_mlp"] = "data"  # expert weights shard F over data too
+        return rules
+    return None
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, probe: bool = False,
+               cfg_override=None) -> tuple:
+    """Returns (lowered, meta) for one cell.
+
+    ``probe=True`` lowers a cost-analysis variant: layers unrolled and no
+    microbatch loop, so cost_analysis() counts every layer (XLA counts
+    while-loop bodies once — see _probe_costs for the two-point scheme).
+    """
+    import dataclasses as dc
+
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = cell_lib.SHAPES[shape_name]
+    if probe:
+        cfg = dc.replace(cfg, scan_layers=False)
+    params_spec = cell_lib.params_spec_for(cfg)
+
+    if shape.kind == "train":
+        dp = int(np.prod([mesh.shape[a] for a in _dp_axes(mesh)]))
+        mb = min(cell_lib.TRAIN_MICROBATCHES[arch], max(shape.global_batch // dp, 1))
+        pshard = sh.param_shardings(params_spec, mesh, fsdp=True)
+        opt_spec = cell_lib.opt_spec_for(cfg, params_spec)
+        oshard = _opt_shardings(opt_spec, params_spec, mesh, fsdp=True)
+        batch_spec = cell_lib.batch_specs_for(cfg, shape)
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), sh.batch_specs(batch_spec, mesh)
+        )
+        step = make_train_step(
+            cfg, microbatches=1 if probe else mb, dp_axes=_dp_axes(mesh)
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_spec, opt_spec, batch_spec)
+        meta = {"microbatches": mb, "fsdp": True}
+    elif shape.kind == "prefill":
+        rules = _serve_rules(arch)
+        pshard = sh.param_shardings(params_spec, mesh, fsdp=False, rules=rules)
+        batch_spec = cell_lib.batch_specs_for(cfg, shape)
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), sh.batch_specs(batch_spec, mesh)
+        )
+        step = make_prefill_step(cfg, max_seq=shape.seq_len)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(params_spec, batch_spec)
+        meta = {"fsdp": False, "serve_rules": arch in cell_lib.SERVE_MLP_DATA}
+    else:  # decode
+        rules = _serve_rules(arch)
+        pshard = sh.param_shardings(params_spec, mesh, fsdp=False, rules=rules)
+        tokens_spec, cache_spec = cell_lib.decode_inputs_for(cfg, shape)
+        cshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), sh.cache_specs(cache_spec, mesh)
+        )
+        tokens_pspec = sh.spec_for(
+            tokens_spec.shape, ("batch", None), mesh, sh.DEFAULT_RULES
+        )  # falls back to replication when batch < dp (long_500k B=1)
+        tshard = NamedSharding(mesh, tokens_pspec)
+        step = make_serve_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(pshard, tshard, cshard),
+            out_shardings=(None, None, cshard),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(params_spec, tokens_spec, cache_spec)
+        meta = {"fsdp": False, "serve_rules": arch in cell_lib.SERVE_MLP_DATA}
+    return lowered, meta, cfg, shape
+
+
+def _probe_costs(arch: str, shape_name: str, mesh) -> rf.RooflineTerms:
+    """Two-point depth probe: compile unrolled L1/L2-layer variants and
+    extrapolate FLOPs / bytes / collective tallies linearly in depth.
+
+    Exact for uniform stacks (every layer identical modulo the cycled
+    local/global pattern, which both probe depths sample at the same
+    ratio). The MoE dense prefix and embed/head/optimizer costs land in
+    the intercept. cost_analysis() undercounts loop bodies, hence the
+    unrolled probes (DESIGN.md).
+    """
+    import dataclasses as dc
+
+    cfg = get_config(arch)
+    prefix = cfg.first_k_dense if cfg.n_experts else 0
+    L_main = cfg.n_layers - prefix
+    period = max(len(cfg.layer_pattern), 1)
+    L1 = min(2 * period, L_main)
+    L2 = min(4 * period, L_main)
+
+    def measure(Lk: int):
+        n_enc = (
+            max(1, round(cfg.n_enc_layers * Lk / L_main)) if cfg.n_enc_layers else 0
+        )
+        cfg_k = dc.replace(
+            cfg,
+            n_layers=Lk + prefix,
+            n_enc_layers=n_enc,
+            global_layer_indices=(0,) if cfg.global_layer_indices else (),
+        )
+        lowered, *_ = lower_cell(arch, shape_name, mesh, probe=True, cfg_override=cfg_k)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        tallies = rf.parse_collectives(compiled.as_text())
+        return (
+            float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            tallies,
+        )
+
+    f2, b2, t2 = measure(L2)
+    if L2 == L_main:  # model already this shallow: exact, no extrapolation
+        flops, bytes_acc, tallies = f2, b2, t2
+    else:
+        f1, b1, t1 = measure(L1)
+        scale = (L_main - L2) / (L2 - L1)
+        flops = f2 + (f2 - f1) * scale
+        bytes_acc = b2 + (b2 - b1) * scale
+        tallies = {}
+        for kind in t2:
+            tallies[kind] = {
+                k: t2[kind][k] + (t2[kind][k] - t1[kind][k]) * scale
+                for k in t2[kind]
+            }
+
+    wire = sum(v["wire_bytes"] for v in tallies.values())
+    hw = rf.V5E
+    return rf.RooflineTerms(
+        compute_s=flops / hw["peak_flops"],
+        memory_s=bytes_acc / hw["hbm_bw"],
+        collective_s=wire / hw["ici_bw"],
+        flops_per_device=flops,
+        bytes_per_device=bytes_acc,
+        wire_bytes_per_device=wire,
+        collectives=tallies,
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, save_hlo: bool = False) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "ok",
+    }
+    skip = cell_lib.cell_skip_reason(arch, shape_name)
+    if skip:
+        record["status"] = "skipped"
+        record["reason"] = skip
+        return record
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh, sh.activation_mesh(mesh):
+            lowered, meta, cfg, shape = lower_cell(arch, shape_name, mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            # two-point cost probe (unrolled 4/8-layer variants, linear
+            # extrapolation in depth — exact for uniform stacks)
+            t_probe0 = time.time()
+            terms = _probe_costs(arch, shape_name, mesh)
+            t_probe = time.time() - t_probe0
+
+            n_chips = 512 if multi_pod else 256
+            mflops = rf.model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
+            hlo_total_flops = terms.flops_per_device * n_chips
+            record.update(meta)
+            record.update(
+                {
+                    "lower_s": round(t_lower, 1),
+                    "compile_s": round(t_compile, 1),
+                    "probe_s": round(t_probe, 1),
+                    "memory": {
+                        "argument_size": getattr(mem, "argument_size_in_bytes", None),
+                        "output_size": getattr(mem, "output_size_in_bytes", None),
+                        "temp_size": getattr(mem, "temp_size_in_bytes", None),
+                        "generated_code_size": getattr(
+                            mem, "generated_code_size_in_bytes", None
+                        ),
+                    },
+                    "roofline": terms.to_dict(),
+                    "model_flops_total": mflops,
+                    "hlo_flops_total": hlo_total_flops,
+                    "useful_flops_ratio": mflops / max(hlo_total_flops, 1.0),
+                    "hbm_per_device_gb": (
+                        (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                        + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                    )
+                    / 1e9,
+                }
+            )
+            if save_hlo:
+                hlo_path = OUT_DIR / f"{arch}_{shape_name}_{mesh_name}.hlo.txt"
+                hlo_path.write_text(hlo)
+                record["hlo_path"] = str(hlo_path)
+    except Exception as e:  # noqa: BLE001 — record and continue
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["total_s"] = round(time.time() - t0, 1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(cell_lib.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multipod]
+
+    if args.all:
+        cells = [(a, s) for a, s, _ in cell_lib.iter_cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        for mp in pods:
+            mesh_name = "2x16x16" if mp else "16x16"
+            out = OUT_DIR / f"{arch}_{shape}_{mesh_name}.json"
+            if args.skip_existing and out.exists():
+                prev = json.loads(out.read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[skip existing] {out.name}")
+                    continue
+            print(f"[dryrun] {arch} x {shape} x {mesh_name} ...", flush=True)
+            rec = run_cell(arch, shape, mp, save_hlo=args.save_hlo)
+            out.write_text(json.dumps(rec, indent=2, default=str))
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (
+                    f" compile={rec['compile_s']}s dominant={r['dominant']}"
+                    f" hbm/dev={rec['hbm_per_device_gb']:.2f}GB"
+                    f" useful={rec['useful_flops_ratio']:.3f}"
+                )
+            elif status == "error":
+                extra = f" ERROR {rec['error'][:200]}"
+            print(f"[dryrun] {arch} x {shape} x {mesh_name}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction (single-pod 16x16 and 2-pod 2x16x16).
+
+A FUNCTION (not module-level constant) so importing never touches jax
+device state. The dry-run entry point sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over locally available devices (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_size(mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    n *= mesh.shape.get("pod", 1)
+    return n
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

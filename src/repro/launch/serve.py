@@ -1,0 +1,60 @@
+"""Serving launcher: prefill a batch of synthetic requests, decode N
+tokens with the jitted serve_step, report tokens/s.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek_7b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as M
+from repro.training import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.n_prefix_embeds:
+        batch["patches"] = jax.random.normal(key, (args.batch, cfg.n_prefix_embeds, cfg.d_model))
+    if cfg.n_enc_layers:
+        batch["frames"] = jax.random.normal(key, (args.batch, 32, cfg.d_model))
+
+    max_seq = args.prompt_len + args.tokens + cfg.n_prefix_embeds + 8
+    t0 = time.perf_counter()
+    logits, cache = M.prefill(params, batch, cfg, max_seq=max_seq)
+    jax.block_until_ready(logits)
+    print(f"[serve] prefill: {time.perf_counter()-t0:.2f}s")
+
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens):
+        tok, _, cache = serve(params, tok, cache)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    print(
+        f"[serve] {args.batch * args.tokens} tokens in {dt:.2f}s "
+        f"({args.batch * args.tokens / dt:.1f} tok/s)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Production training launcher.
+
+On a real fleet this runs under multi-host jax.distributed with one
+process per host; here it drives the same code path on the local device
+set. The dry-run (launch/dryrun.py) proves the production mesh compiles.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2_130m \
+      --steps 50 --batch 8 --seq 128 [--reduced] [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.lm_pipeline import batch_at_step
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default="checkpoints/train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    def data_fn(step):
+        return batch_at_step(cfg, step, batch=args.batch, seq_len=args.seq, seed=0)
+
+    trainer = Trainer(
+        cfg,
+        TrainerConfig(
+            total_steps=args.steps,
+            checkpoint_every=args.ckpt_every,
+            checkpoint_dir=f"{args.ckpt_dir}/{args.arch}",
+            base_lr=args.lr,
+            microbatches=args.microbatches,
+        ),
+        data_fn,
+    )
+    params, opt_state, start = trainer.init_or_restore()
+    print(f"[train] {args.arch} starting at step {start}")
+    t0 = time.time()
+    trainer.run()
+    dt = time.time() - t0
+    n = len(trainer.history)
+    print(
+        f"[train] done: {n} steps in {dt:.1f}s "
+        f"({dt / max(n,1):.2f}s/step), loss {trainer.history[0]:.3f} -> "
+        f"{trainer.history[-1]:.3f}, stragglers={len(trainer.monitor.stragglers)}"
+    )
+
+
+if __name__ == "__main__":
+    main()

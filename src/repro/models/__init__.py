@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models import attention, layers, model, moe, sharding, ssm
+
+__all__ = ["ModelConfig", "attention", "layers", "model", "moe", "sharding", "ssm"]

@@ -1,0 +1,327 @@
+"""Grouped-query attention with RoPE, KV cache, sliding windows, softcap.
+
+Covers every attention variant in the assigned pool:
+  * GQA with arbitrary (n_heads, n_kv_heads), optional QKV bias (qwen2),
+  * local/global alternation + attn-logit softcapping (gemma2),
+  * bidirectional encoder attention + cross attention (seamless),
+  * one-token decode against a preallocated KV cache (serve_step).
+
+The XLA path below is what the dry-run lowers; a Pallas flash kernel is a
+drop-in for TPU runs (kernels/ — validated in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, softcap
+
+NEG_INF = -2.0**30  # large-negative fp32/bf16-safe mask value
+
+
+class KVCache(NamedTuple):
+    """Per-layer slice of the decode cache."""
+
+    k: jax.Array  # (B, max_seq, KV, hd)
+    v: jax.Array  # (B, max_seq, KV, hd)
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, cfg.d_model, cfg.q_dim, dt),
+        "wk": dense_init(k2, cfg.d_model, cfg.kv_dim, dt),
+        "wv": dense_init(k3, cfg.d_model, cfg.kv_dim, dt),
+        "wo": dense_init(k4, cfg.q_dim, cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    return p
+
+
+def _project_qkv(params: Dict, xq: jax.Array, xkv: jax.Array, cfg: ModelConfig):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    hd = cfg.resolved_head_dim
+    q = xq @ params["wq"]
+    k = xkv @ params["wk"]
+    v = xkv @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, Sq, cfg.n_heads, hd)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, hd)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _sdpa(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KV, hd)
+    v: jax.Array,  # (B, Skv, KV, hd)
+    mask: Optional[jax.Array],  # broadcastable to (B, H, Sq, Skv) or None
+    cfg: ModelConfig,
+    *,
+    decode: bool = False,
+) -> jax.Array:
+    """SDPA with GQA via KV-head repetition, fp32 softmax.
+
+    The repeat-KV formulation keeps a single shardable head axis (Megatron
+    GQA-TP): q heads shard over "model" while the repeated K/V slices are
+    formed locally from the (replicated or seq-sharded) KV projections.
+    The grouped (B,KV,G,Sq,Skv) einsum variant cannot shard KV=8 over a
+    16-way model axis and replicates the score tensor — measured 4.3GB/dev
+    on qwen2 train (EXPERIMENTS.md §Perf).
+
+    decode=True keeps K/V in the cache's (possibly seq-sharded) layout and
+    leaves repeated heads unsharded — flash-decode style: scores/out reduce
+    over the sharded cache-seq dim via psum instead of re-sharding the
+    cache per token.
+    """
+    from repro.models import sharding as sh_lib
+
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    if decode:
+        pass  # inherit the cache layout (seq- or head-sharded) — no reshard
+    else:
+        q = sh_lib.constrain(q, "batch", "seq", "heads", None)
+        k = sh_lib.constrain(k, "batch", "kv_seq", "heads", None)
+        v = sh_lib.constrain(v, "batch", "kv_seq", "heads", None)
+    # bf16 operands, fp32 accumulate/output — MXU-native; avoids XLA
+    # hoisting an f32 conversion of the whole KV cache (measured 21GB/dev
+    # on qwen2 decode_32k, EXPERIMENTS.md §Perf)
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q, k, preferred_element_type=jnp.float32
+    )
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if cfg.attn_softcap:
+        scores = softcap(scores, cfg.attn_softcap)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out
+
+
+def _streaming_sdpa(
+    q: jax.Array,  # (B, S, H, hd) — RoPE already applied
+    k: jax.Array,  # (B, S, H, hd) — KV heads already repeated
+    v: jax.Array,
+    cfg: ModelConfig,
+    is_local,  # traced bool (per-layer flag)
+) -> jax.Array:
+    """Flash-style attention in pure XLA: outer scan over query chunks,
+    inner scan over KV chunks with online max/sum. Peak score memory is
+    O(qc * kc) per step instead of O(S^2); FLOPs match the dense masked
+    formulation (which also computes the full square).
+
+    Local (sliding-window) layers with window == chunk use a STATIC
+    2-chunk band — 16x fewer score FLOPs at 32k/window=1024 (hymba).
+    """
+    from repro.models import sharding as sh_lib
+
+    B, S, H, hd = q.shape
+    C = min(cfg.streaming_chunk, S)
+    if cfg.sliding_window:
+        C = min(C, max(cfg.sliding_window, 128))
+    nq = S // C
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qc = q.reshape(B, nq, C, H, hd)
+    kc = k.reshape(B, nq, C, H, hd)
+    vc = v.reshape(B, nq, C, H, hd)
+
+    q_pos = jnp.arange(S).reshape(nq, C)
+
+    def attend_block(qi, q_blk, kv_idx, k_blk, v_blk, m, l, acc):
+        """Online-softmax update of one (q_blk, kv_blk) pair."""
+        s = jnp.einsum(
+            "bchd,bkhd->bhck", q_blk, k_blk, preferred_element_type=jnp.float32
+        ) * scale
+        if cfg.attn_softcap:
+            s = softcap(s, cfg.attn_softcap)
+        qp = q_pos[qi][:, None]  # (C, 1)
+        kp = (kv_idx * C + jnp.arange(C))[None, :]  # (1, C)
+        mask = kp <= qp
+        if cfg.sliding_window:
+            local_m = mask & (kp > qp - cfg.sliding_window)
+            mask = jnp.where(jnp.asarray(is_local), local_m, mask)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))  # (B, H, C)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhck,bkhd->bhcd", p.astype(q.dtype), v_blk,
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    def q_chunk_body(carry, qi):
+        q_blk = qc[:, qi]  # (B, C, H, hd)
+        m0 = jnp.full((B, H, C), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, C), jnp.float32)
+        a0 = jnp.zeros((B, H, C, hd), jnp.float32)
+
+        def band():
+            # static 2-chunk band: kv chunks {qi-1, qi} (window <= C)
+            prev = jnp.maximum(qi - 1, 0)
+            m1, l1, a1 = attend_block(
+                qi, q_blk, prev, kc[:, prev], vc[:, prev], m0, l0, a0
+            )
+            return attend_block(qi, q_blk, qi, kc[:, qi], vc[:, qi], m1, l1, a1)
+
+        def full_scan():
+            def kv_body(c, kj):
+                m, l, a = c
+                m, l, a = attend_block(qi, q_blk, kj, kc[:, kj], vc[:, kj], m, l, a)
+                return (m, l, a), None
+
+            (m1, l1, a1), _ = jax.lax.scan(
+                kv_body, (m0, l0, a0), jnp.arange(nq)
+            )
+            return m1, l1, a1
+
+        if cfg.sliding_window and cfg.sliding_window <= C:
+            m, l, acc = jax.lax.cond(jnp.asarray(is_local), band, full_scan)
+        else:
+            m, l, acc = full_scan()
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return carry, out.transpose(0, 2, 1, 3)  # (B, C, H, hd)
+
+    _, outs = jax.lax.scan(q_chunk_body, 0, jnp.arange(nq))
+    # outs: (nq, B, C, H, hd) -> (B, S, H, hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def causal_mask(Sq: int, Skv: int, window: int = 0, offset: int = 0) -> jax.Array:
+    """(1, 1, Sq, Skv) boolean mask. ``offset`` = absolute position of query 0.
+    ``window`` > 0 restricts to a sliding window (local attention)."""
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Skv)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m[None, None]
+
+
+def attend(
+    params: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    is_local: jax.Array | bool = False,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill without cache return)."""
+    out, _ = attend_with_kv(params, x, positions, cfg, is_local=is_local, causal=causal)
+    return out
+
+
+def attend_with_kv(
+    params: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    is_local: jax.Array | bool = False,
+    causal: bool = True,
+) -> Tuple[jax.Array, KVCache]:
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if causal and S >= cfg.streaming_attn_threshold and S % min(cfg.streaming_chunk, S) == 0:
+        from repro.models import sharding as sh_lib
+
+        H = cfg.n_heads
+        KV = k.shape[2]
+        kf = jnp.repeat(k, H // KV, axis=2) if KV != H else k
+        vf = jnp.repeat(v, H // KV, axis=2) if KV != H else v
+        qs = sh_lib.constrain(q, "batch", "seq", "heads", None)
+        kf = sh_lib.constrain(kf, "batch", "kv_seq", "heads", None)
+        vf = sh_lib.constrain(vf, "batch", "kv_seq", "heads", None)
+        out = _streaming_sdpa(qs, kf, vf, cfg, is_local)
+    else:
+        if causal:
+            full = causal_mask(S, S)
+            if cfg.sliding_window:
+                local = causal_mask(S, S, window=cfg.sliding_window)
+                mask = jnp.where(jnp.asarray(is_local), local, full)
+            else:
+                mask = full
+        else:
+            mask = jnp.ones((1, 1, S, S), bool)
+        out = _sdpa(q, k, v, mask, cfg)
+    out = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+    return out, KVCache(k=k, v=v)
+
+
+def cross_attend(
+    params: Dict,
+    x: jax.Array,
+    memory: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Encoder-decoder cross attention (no RoPE on cross keys, full mask)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, memory, cfg)
+    out = _sdpa(q, k, v, None, cfg)
+    return out.reshape(B, S, cfg.q_dim) @ params["wo"]
+
+
+def decode_attend(
+    params: Dict,
+    x: jax.Array,  # (B, 1, D) current token activations
+    cache: KVCache,  # preallocated (B, max_seq, KV, hd)
+    cache_len: jax.Array,  # (B,) current lengths (tokens already in cache)
+    cfg: ModelConfig,
+    *,
+    is_local: jax.Array | bool = False,
+) -> Tuple[jax.Array, KVCache]:
+    """One-token decode: append K/V at cache_len, attend over the prefix."""
+    B = x.shape[0]
+    max_seq = cache.k.shape[1]
+    positions = cache_len[:, None]  # (B, 1)
+    q, k, v = _project_qkv(params, x, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cfg.ragged_decode:
+        # per-row positions (continuous batching): one-hot scatter-add.
+        # Costs two cache-sized temporaries (baseline in §Perf).
+        onehot = jax.nn.one_hot(cache_len, max_seq, dtype=cache.k.dtype)
+        k_cache = cache.k + onehot[:, :, None, None] * k
+        v_cache = cache.v + onehot[:, :, None, None] * v
+    else:
+        # uniform-length fast path: in-place row update, no temporaries
+        pos = cache_len[0]
+        k_cache = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, pos, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0)
+        )
+
+    kpos = jnp.arange(max_seq)[None, :]
+    valid = kpos <= cache_len[:, None]
+    if cfg.sliding_window:
+        local_valid = valid & (kpos > (cache_len[:, None] - cfg.sliding_window))
+        valid = jnp.where(jnp.asarray(is_local), local_valid, valid)
+    mask = valid[:, None, None, :]  # (B, 1, 1(Sq), max_seq)
+
+    out = _sdpa(q, k_cache, v_cache, mask, cfg, decode=True)
+    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return out, KVCache(k=k_cache, v=v_cache)

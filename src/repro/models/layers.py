@@ -1,0 +1,138 @@
+"""Shared neural layers: norms, RoPE, gated MLP, embeddings.
+
+Pure-JAX (no flax): params are plain dicts, init_* builds them, apply
+functions are stateless. All matmuls run in the config dtype with fp32
+normalization statistics and fp32 logits at the loss boundary.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, cfg.d_model, d_ff, dt),
+        "w_up": dense_init(k2, cfg.d_model, d_ff, dt),
+        "w_down": dense_init(k3, d_ff, cfg.d_model, dt),
+    }
+
+
+def _activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+def apply_mlp(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = _activation(cfg.act)
+    h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig) -> Dict:
+    dt = _dtype(cfg)
+    scale = 1.0 / jnp.sqrt(cfg.d_model)  # O(1) logits whether tied or not
+    p = {
+        "tok": (
+            jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32) * scale
+        ).astype(dt)
+    }
+    return p
+
+
+def embed_tokens(params: Dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        # gemma-style sqrt(d) scaling when the table doubles as the LM head
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def init_lm_head(key, cfg: ModelConfig) -> Dict:
+    if cfg.tie_embeddings:
+        return {}
+    dt = _dtype(cfg)
+    return {"w": dense_init(key, cfg.d_model, cfg.vocab_size, dt)}
+
+
+def lm_logits(head: Dict, embed: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Final projection, fp32 output, optional logit softcapping (gemma2)."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, embed["tok"], preferred_element_type=jnp.float32
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, head["w"], preferred_element_type=jnp.float32
+        )
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def softcap(x: jax.Array, cap) -> jax.Array:
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,487 @@
+"""Composable decoder / encoder-decoder LM covering all assigned families.
+
+Blocks are pre-norm residual (optionally sandwich-norm, gemma2); the mixer
+is attention, SSD, or both in parallel (hymba); the FFN is a gated MLP,
+an MoE layer, or absent (mamba2, d_ff=0). Layer stacks run under
+``jax.lax.scan`` over stacked params with optional remat, which keeps HLO
+size and compile time bounded at 80 layers x 512 devices.
+
+Entry points:
+  init_params(key, cfg)                     -> param pytree
+  forward(params, batch, cfg)               -> fp32 logits (train/prefill)
+  loss_fn(params, batch, cfg)               -> scalar CE loss + metrics
+  init_cache(cfg, batch, max_seq, dtype)    -> decode cache pytree
+  prefill(params, batch, cfg, cache)        -> (logits_last, cache)
+  decode_step(params, tokens, cache, cfg)   -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import sharding as sh_lib
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    dense_init,
+    embed_tokens,
+    init_embedding,
+    init_lm_head,
+    init_mlp,
+    init_rmsnorm,
+    lm_logits,
+    apply_mlp,
+    rmsnorm,
+)
+
+# ---------------------------------------------------------------------------
+# Per-layer flags
+# ---------------------------------------------------------------------------
+
+
+def local_layer_flags(cfg: ModelConfig, n_layers: int) -> np.ndarray:
+    """Boolean array: True where the layer uses local (sliding) attention."""
+    if cfg.global_layer_indices:
+        flags = np.ones(n_layers, bool)
+        for i in cfg.global_layer_indices:
+            if i < n_layers:
+                flags[i] = False
+        return flags
+    return np.array(
+        [cfg.pattern_for_layer(i) == "local" for i in range(n_layers)], bool
+    )
+
+
+def _has_attn(cfg: ModelConfig) -> bool:
+    return cfg.family != "ssm"
+
+
+def _has_ssm(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def _has_ffn(cfg: ModelConfig) -> bool:
+    return cfg.d_ff > 0 or cfg.n_experts > 0
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, *, use_moe: bool, cross: bool = False) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: Dict = {"ln1": init_rmsnorm(cfg.d_model, dt)}
+    if _has_attn(cfg):
+        p["attn"] = attn_lib.init_attention(keys[0], cfg)
+    if _has_ssm(cfg):
+        p["ssm"] = ssm_lib.init_ssm(keys[1], cfg)
+    if cross:
+        p["ln_cross"] = init_rmsnorm(cfg.d_model, dt)
+        p["cross"] = attn_lib.init_attention(keys[2], cfg)
+    if _has_ffn(cfg):
+        p["ln2"] = init_rmsnorm(cfg.d_model, dt)
+        if use_moe:
+            p["moe"] = moe_lib.init_moe(keys[3], cfg)
+        else:
+            p["mlp"] = init_mlp(keys[4], cfg)
+    if cfg.sandwich_norm:
+        p["ln1_post"] = init_rmsnorm(cfg.d_model, dt)
+        if _has_ffn(cfg):
+            p["ln2_post"] = init_rmsnorm(cfg.d_model, dt)
+    return p
+
+
+def _stack_blocks(key, cfg: ModelConfig, n: int, *, use_moe: bool, cross: bool = False):
+    keys = jax.random.split(key, n)
+    return jax.vmap(
+        lambda k: _init_block(k, cfg, use_moe=use_moe, cross=cross)
+    )(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    k_embed, k_pre, k_main, k_enc, k_head, k_front = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    params: Dict = {"embed": init_embedding(k_embed, cfg)}
+
+    n_moe_layers = cfg.n_layers - cfg.first_k_dense if cfg.n_experts else cfg.n_layers
+    if cfg.n_experts and cfg.first_k_dense:
+        params["prefix_layers"] = _stack_blocks(
+            k_pre, cfg, cfg.first_k_dense, use_moe=False
+        )
+    params["layers"] = _stack_blocks(
+        k_main, cfg, n_moe_layers, use_moe=cfg.n_experts > 0,
+        cross=cfg.cross_attention,
+    )
+    if cfg.n_enc_layers:
+        ke1, ke2 = jax.random.split(k_enc)
+        params["encoder"] = {
+            "frontend": dense_init(ke1, cfg.d_model, cfg.d_model, dt),
+            "layers": _stack_blocks(ke2, cfg, cfg.n_enc_layers, use_moe=False),
+            "norm": init_rmsnorm(cfg.d_model, dt),
+        }
+    if cfg.n_prefix_embeds:
+        params["patch_proj"] = dense_init(k_front, cfg.d_model, cfg.d_model, dt)
+    params["final_norm"] = init_rmsnorm(cfg.d_model, dt)
+    params["lm_head"] = init_lm_head(k_head, cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block apply (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    block: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    is_local,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    memory: Optional[jax.Array] = None,
+) -> jax.Array:
+    h = rmsnorm(block["ln1"], x, cfg.norm_eps)
+    mix = 0.0
+    if "attn" in block:
+        mix = attn_lib.attend(
+            block["attn"], h, positions, cfg, is_local=is_local, causal=causal
+        )
+    if "ssm" in block:
+        s = ssm_lib.apply_ssm(block["ssm"], h, cfg)
+        mix = 0.5 * (mix + s) if "attn" in block else s
+    if cfg.sandwich_norm:
+        mix = rmsnorm(block["ln1_post"], mix, cfg.norm_eps)
+    x = x + mix
+
+    if memory is not None and "cross" in block:
+        hc = rmsnorm(block["ln_cross"], x, cfg.norm_eps)
+        x = x + attn_lib.cross_attend(block["cross"], hc, memory, cfg)
+
+    if "ln2" in block:
+        h2 = rmsnorm(block["ln2"], x, cfg.norm_eps)
+        if "moe" in block:
+            ff = moe_lib.apply_moe(block["moe"], h2, cfg)
+        else:
+            ff = apply_mlp(block["mlp"], h2, cfg)
+        if cfg.sandwich_norm:
+            ff = rmsnorm(block["ln2_post"], ff, cfg.norm_eps)
+        x = x + ff
+    return x
+
+
+def _maybe_scan(body, x, xs_tree, cfg: ModelConfig):
+    """lax.scan over stacked layers, or a Python unroll when
+    cfg.scan_layers=False (used by the dry-run cost probe: XLA's
+    cost_analysis counts while-loop bodies once)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, xs_tree)
+    n = jax.tree.leaves(xs_tree)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x, y = body(x, jax.tree.map(lambda a: a[i], xs_tree))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return x, stacked
+
+
+def _scan_stack(
+    stacked: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    local_flags: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    memory: Optional[jax.Array] = None,
+) -> jax.Array:
+    def body(carry, layer):
+        block, is_local = layer
+        out = _apply_block(
+            block, carry, positions, is_local, cfg, causal=causal, memory=memory
+        )
+        return out, None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if cfg.remat else body
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(fn, x, (stacked, local_flags))
+        return x
+    n = local_flags.shape[0]
+    for i in range(n):
+        block = jax.tree.map(lambda a: a[i], stacked)
+        x, _ = fn(x, (block, local_flags[i]))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _encode(params: Dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Encoder over stub frame embeddings (B, S_enc, D)."""
+    enc = params["encoder"]
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ enc["frontend"]
+    x = sh_lib.constrain(x, "batch", "seq", "act_embed")
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], x.shape[:2])
+    flags = jnp.zeros((cfg.n_enc_layers,), bool)
+    x = _scan_stack(enc["layers"], x, positions, flags, cfg, causal=False)
+    return rmsnorm(enc["norm"], x, cfg.norm_eps)
+
+
+def _decoder_inputs(params, batch, cfg: ModelConfig):
+    """Token embeddings (+ multimodal prefix) and positions for the decoder."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens, cfg)
+    prefix_len = 0
+    if cfg.n_prefix_embeds and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+        prefix_len = patches.shape[1]
+    B, S = x.shape[:2]
+    x = sh_lib.constrain(x, "batch", "seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return x, positions, prefix_len
+
+
+def forward(params: Dict, batch: Dict, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence forward -> fp32 logits over the decoder positions."""
+    memory = None
+    if cfg.n_enc_layers:
+        memory = _encode(params, batch["frames"], cfg)
+
+    x, positions, prefix_len = _decoder_inputs(params, batch, cfg)
+
+    if "prefix_layers" in params:
+        pre_flags = jnp.asarray(local_layer_flags(cfg, cfg.first_k_dense))
+        x = _scan_stack(params["prefix_layers"], x, positions, pre_flags, cfg,
+                        memory=memory)
+    n_main = cfg.n_layers - (cfg.first_k_dense if cfg.n_experts else 0)
+    offset = cfg.first_k_dense if cfg.n_experts else 0
+    flags_all = local_layer_flags(cfg, cfg.n_layers)
+    flags = jnp.asarray(flags_all[offset:])
+    x = _scan_stack(params["layers"], x, positions, flags, cfg, memory=memory)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if prefix_len:
+        x = x[:, prefix_len:]
+    return lm_logits(params["lm_head"], params["embed"], x, cfg)
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ModelConfig):
+    """Next-token cross entropy. batch['tokens'] has S+1 positions."""
+    tokens = batch["tokens"]
+    inputs = dict(batch)
+    inputs["tokens"] = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    logits = forward(params, inputs, cfg)  # (B, S, V) fp32
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    metrics = {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Dict:
+    dt = jnp.dtype(dtype or cfg.dtype)
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    cache: Dict = {"len": jnp.zeros((batch,), jnp.int32)}
+    if _has_attn(cfg):
+        cache["k"] = jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dt)
+        cache["v"] = jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, hd), dt)
+    if _has_ssm(cfg):
+        cache["conv"] = jnp.zeros(
+            (L, batch, cfg.ssm_conv_width - 1, ssm_lib.conv_dim(cfg)), dt
+        )
+        cache["ssm"] = jnp.zeros(
+            (L, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+    return cache
+
+
+def prefill(params: Dict, batch: Dict, cfg: ModelConfig, max_seq: int):
+    """Process the prompt, build the cache, return last-position logits.
+
+    Note: for simplicity the prompt occupies positions [0, S); all batch
+    rows share the prompt length (synthetic serving harness).
+    """
+    memory = _encode(params, batch["frames"], cfg) if cfg.n_enc_layers else None
+    x, positions, prefix_len = _decoder_inputs(params, batch, cfg)
+    B, S = x.shape[:2]
+    cache = init_cache(cfg, B, max(max_seq, S))  # prefix embeds may extend S
+    flags_all = local_layer_flags(cfg, cfg.n_layers)
+
+    # run block-by-block collecting KV (scan emits per-layer cache slices)
+    def body(carry, layer):
+        block, is_local = layer
+        h = rmsnorm(block["ln1"], carry, cfg.norm_eps)
+        new_caches = {}
+        mix = 0.0
+        if "attn" in block:
+            a, kv = attn_lib.attend_with_kv(
+                block["attn"], h, positions, cfg, is_local=is_local
+            )
+            mix = a
+            new_caches["k"], new_caches["v"] = kv.k, kv.v
+        if "ssm" in block:
+            s, state = ssm_lib.apply_ssm_with_state(block["ssm"], h, cfg)
+            mix = 0.5 * (mix + s) if "attn" in block else s
+            new_caches["ssm"] = state
+            # conv cache: last W-1 conv inputs of the prompt
+            zxbcdt = h @ block["ssm"]["in_proj"]
+            _, xbc, _ = ssm_lib._split_in_proj(zxbcdt, cfg)
+            new_caches["conv"] = xbc[:, -(cfg.ssm_conv_width - 1):, :]
+        if cfg.sandwich_norm:
+            mix = rmsnorm(block["ln1_post"], mix, cfg.norm_eps)
+        out = carry + mix
+        if memory is not None and "cross" in block:
+            hc = rmsnorm(block["ln_cross"], out, cfg.norm_eps)
+            out = out + attn_lib.cross_attend(block["cross"], hc, memory, cfg)
+        if "ln2" in block:
+            h2 = rmsnorm(block["ln2"], out, cfg.norm_eps)
+            ff = moe_lib.apply_moe(block["moe"], h2, cfg) if "moe" in block else apply_mlp(block["mlp"], h2, cfg)
+            if cfg.sandwich_norm:
+                ff = rmsnorm(block["ln2_post"], ff, cfg.norm_eps)
+            out = out + ff
+        return out, new_caches
+
+    stacks = []
+    if "prefix_layers" in params:
+        stacks.append((params["prefix_layers"], flags_all[: cfg.first_k_dense]))
+        stacks.append((params["layers"], flags_all[cfg.first_k_dense :]))
+    else:
+        stacks.append((params["layers"], flags_all))
+
+    collected = []
+    for stacked, flags in stacks:
+        x, caches = _maybe_scan(body, x, (stacked, jnp.asarray(flags)), cfg)
+        collected.append(caches)
+
+    # merge per-stack caches into the preallocated buffers
+    layer_off = 0
+    for caches in collected:
+        n = jax.tree.leaves(caches)[0].shape[0] if caches else 0
+        if not caches:
+            continue
+        if "k" in caches and "k" in cache:
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"],
+                jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros_like(cache["k"][layer_off : layer_off + n]),
+                    caches["k"], 0, axis=2,
+                ),
+                layer_off, axis=0,
+            )
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"],
+                jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros_like(cache["v"][layer_off : layer_off + n]),
+                    caches["v"], 0, axis=2,
+                ),
+                layer_off, axis=0,
+            )
+        if "ssm" in caches and "ssm" in cache:
+            cache["ssm"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["ssm"], caches["ssm"].astype(cache["ssm"].dtype), layer_off, axis=0
+            )
+            cache["conv"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["conv"], caches["conv"].astype(cache["conv"].dtype), layer_off, axis=0
+            )
+        layer_off += n
+
+    cache["len"] = jnp.full((B,), S, jnp.int32)  # S already includes prefix
+    if memory is not None:
+        cache["memory"] = memory
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["lm_head"], params["embed"], x[:, -1:], cfg)
+    return logits, cache
+
+
+def decode_step(params: Dict, tokens: jax.Array, cache: Dict, cfg: ModelConfig):
+    """One decode step. tokens: (B, 1) -> (logits (B,1,V), updated cache)."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = sh_lib.constrain(x, "batch", "seq", "act_embed")
+    memory = cache.get("memory")
+    flags_all = jnp.asarray(local_layer_flags(cfg, cfg.n_layers))
+    cache_len = cache["len"]
+
+    def body(carry, layer):
+        block, is_local, layer_cache = layer
+        h = rmsnorm(block["ln1"], carry, cfg.norm_eps)
+        new_cache = {}
+        mix = 0.0
+        if "attn" in block:
+            kv = KVCache(k=layer_cache["k"], v=layer_cache["v"])
+            a, kv = attn_lib.decode_attend(
+                block["attn"], h, kv, cache_len, cfg, is_local=is_local
+            )
+            mix = a
+            new_cache["k"], new_cache["v"] = kv.k, kv.v
+        if "ssm" in block:
+            sc = ssm_lib.SSMCache(conv=layer_cache["conv"], state=layer_cache["ssm"])
+            s, sc = ssm_lib.decode_ssm(block["ssm"], h, sc, cfg)
+            mix = 0.5 * (mix + s) if "attn" in block else s
+            new_cache["conv"], new_cache["ssm"] = sc.conv, sc.state
+        if cfg.sandwich_norm:
+            mix = rmsnorm(block["ln1_post"], mix, cfg.norm_eps)
+        out = carry + mix
+        if memory is not None and "cross" in block:
+            hc = rmsnorm(block["ln_cross"], out, cfg.norm_eps)
+            out = out + attn_lib.cross_attend(block["cross"], hc, memory, cfg)
+        if "ln2" in block:
+            h2 = rmsnorm(block["ln2"], out, cfg.norm_eps)
+            ff = moe_lib.apply_moe(block["moe"], h2, cfg) if "moe" in block else apply_mlp(block["mlp"], h2, cfg)
+            if cfg.sandwich_norm:
+                ff = rmsnorm(block["ln2_post"], ff, cfg.norm_eps)
+            out = out + ff
+        return out, new_cache
+
+    cache_keys = [k for k in ("k", "v", "conv", "ssm") if k in cache]
+
+    layer_off = 0
+    x_cur = x
+    stacks = []
+    if "prefix_layers" in params:
+        stacks.append((params["prefix_layers"], cfg.first_k_dense))
+        stacks.append((params["layers"], cfg.n_layers - cfg.first_k_dense))
+    else:
+        stacks.append((params["layers"], cfg.n_layers))
+
+    for stacked, n in stacks:
+        flags = jax.lax.dynamic_slice_in_dim(flags_all, layer_off, n)
+        slice_cache = {
+            k: jax.lax.dynamic_slice_in_dim(cache[k], layer_off, n, axis=0)
+            for k in cache_keys
+        }
+        x_cur, new_slices = _maybe_scan(body, x_cur, (stacked, flags, slice_cache), cfg)
+        for k in cache_keys:
+            if k in new_slices:
+                cache[k] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[k], new_slices[k].astype(cache[k].dtype), layer_off, axis=0
+                )
+        layer_off += n
+
+    cache["len"] = cache_len + 1
+    x_cur = rmsnorm(params["final_norm"], x_cur, cfg.norm_eps)
+    logits = lm_logits(params["lm_head"], params["embed"], x_cur, cfg)
+    return logits, cache

@@ -1,0 +1,250 @@
+"""Logical-axis sharding rules (MaxText-style) for params, batches, caches.
+
+Every param leaf gets logical axis names derived from its path and rank;
+``rules`` map logical names to mesh axes. A dimension that does not divide
+evenly by its mesh-axis size falls back to replication (e.g. hymba's 25
+query heads on a 16-way model axis).
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+Batch is sharded over ("pod","data") [DP], weights' heads/mlp/vocab/experts
+over "model" [TP/EP], and large embed dims over "data" [FSDP/ZeRO-3-style]
+when ``fsdp=True``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical axes per param leaf (matched on the tree path suffix)
+# ---------------------------------------------------------------------------
+
+# pattern -> logical axes of the *unstacked* leaf (no layer dim)
+_PARAM_AXES = [
+    (r"embed/tok$", ("vocab", "embed")),
+    (r"lm_head/w$", ("embed", "vocab")),
+    (r"patch_proj$", ("embed", "embed2")),
+    (r"encoder/frontend$", ("embed", "embed2")),
+    (r"(attn|cross)/wq$", ("embed", "heads")),
+    (r"(attn|cross)/wk$", ("embed", "kv_heads")),
+    (r"(attn|cross)/wv$", ("embed", "kv_heads")),
+    (r"(attn|cross)/wo$", ("heads", "embed")),
+    (r"(attn|cross)/bq$", ("heads",)),
+    (r"(attn|cross)/b[kv]$", ("kv_heads",)),
+    (r"(mlp|shared|dense)/w_gate$", ("embed", "mlp")),
+    (r"(mlp|shared|dense)/w_up$", ("embed", "mlp")),
+    (r"(mlp|shared|dense)/w_down$", ("mlp", "embed")),
+    (r"moe/router$", ("embed", None)),
+    (r"moe/w_gate$", ("experts", "moe_embed", "moe_mlp")),
+    (r"moe/w_up$", ("experts", "moe_embed", "moe_mlp")),
+    (r"moe/w_down$", ("experts", "moe_mlp", "moe_embed")),
+    (r"ssm/in_proj$", ("embed", "mlp")),
+    (r"ssm/out_proj$", ("mlp", "embed")),
+    (r"ssm/conv_w$", (None, "mlp")),
+    (r"ssm/conv_b$", ("mlp",)),
+    (r"ssm/(A_log|D|dt_bias)$", (None,)),
+    (r"(norm|ln1|ln2|ln1_post|ln2_post|ln_cross|final_norm)(/scale)?$", (None,)),
+]
+
+# logical axis -> mesh axis (None = replicate)
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "embed": None,  # flipped to "data" under fsdp
+    "embed2": None,
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "act_embed": None,  # residual-stream feature dim ('model' = seq-par/TP-act)
+    # MoE expert weights: baseline mirrors dense rules (embed FSDP-gathered
+    # per microbatch). The weight-stationary alternative (hillclimb) sets
+    # moe_mlp -> 'data' + experts_act -> 'model' so expert weights never
+    # move and tokens all-to-all instead (DESIGN.md / EXPERIMENTS.md §Perf).
+    "moe_embed": None,  # flipped to "data" under fsdp (baseline)
+    "moe_mlp": None,
+    "experts_act": None,  # expert dim of dispatch buffers
+}
+
+
+def weight_stationary_moe_rules(fsdp_dense: bool = True) -> Dict:
+    """Rules for the weight-stationary MoE scheme (§Perf)."""
+    rules = dict(DEFAULT_RULES)
+    if fsdp_dense:
+        rules["embed"] = "data"
+    rules["moe_embed"] = None
+    rules["moe_mlp"] = "data"
+    rules["experts_act"] = "model"
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (mesh context set by the launcher; no-op
+# in mesh-less unit tests). GSPMD cannot infer a good output sharding for
+# the embedding gather when the table is sharded on both dims — without an
+# explicit constraint it replicates the whole residual stream.
+# ---------------------------------------------------------------------------
+
+_ACT_CTX: Dict[str, object] = {"mesh": None, "rules": None}
+
+
+class activation_mesh:
+    """Context manager: enable activation constraints under this mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict] = None):
+        self.mesh = mesh
+        self.rules = dict(rules or DEFAULT_RULES)
+
+    def __enter__(self):
+        self._saved = dict(_ACT_CTX)
+        _ACT_CTX["mesh"] = self.mesh
+        _ACT_CTX["rules"] = self.rules
+        return self
+
+    def __exit__(self, *exc):
+        _ACT_CTX.update(self._saved)
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axis names; no-op without context."""
+    mesh = _ACT_CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, axes, mesh, _ACT_CTX["rules"])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            parts.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            parts.append(str(entry.idx))
+    return "/".join(parts)
+
+
+def logical_axes(params) -> Dict:
+    """Pytree of logical-axis tuples matching ``params``' structure.
+
+    Leaves stacked with a leading layer dim (from scan-over-layers init)
+    get a leading None automatically when rank exceeds the pattern rank.
+    """
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        for pat, axes in _PARAM_AXES:
+            if re.search(pat, ps):
+                extra = leaf.ndim - len(axes)
+                assert extra >= 0, f"{ps}: rank {leaf.ndim} < {axes}"
+                return (None,) * extra + tuple(axes)
+        # unknown leaves replicate
+        return (None,) * leaf.ndim
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis if a in mesh.shape]))
+    return int(mesh.shape.get(axis, 1))
+
+
+def spec_for(
+    shape: Tuple[int, ...],
+    axes: Tuple,
+    mesh: Mesh,
+    rules: Dict[str, Optional[str]],
+) -> P:
+    """PartitionSpec with divisibility fallback to replication."""
+    spec = []
+    used = set()
+    for dim, name in zip(shape, axes):
+        mesh_axis = rules.get(name) if name else None
+        if mesh_axis is None:
+            spec.append(None)
+            continue
+        axes_tuple = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        axes_tuple = tuple(a for a in axes_tuple if a in mesh.shape and a not in used)
+        size = int(np.prod([mesh.shape[a] for a in axes_tuple])) if axes_tuple else 1
+        if not axes_tuple or size == 1 or dim % size != 0:
+            spec.append(None)
+            continue
+        used.update(axes_tuple)
+        spec.append(axes_tuple[0] if len(axes_tuple) == 1 else axes_tuple)
+    return P(*spec)
+
+
+def param_specs(params_shapes, mesh: Mesh, fsdp: bool = False, rules=None):
+    """PartitionSpec pytree for a (shape-only) param pytree."""
+    rules = dict(rules or DEFAULT_RULES)
+    if fsdp:
+        rules["embed"] = "data"
+        if rules.get("moe_mlp") is None:
+            rules["moe_embed"] = "data"  # baseline: FSDP MoE weights too
+    axes_tree = logical_axes(params_shapes)
+
+    def to_spec(leaf, axes):
+        return spec_for(leaf.shape, axes, mesh, rules)
+
+    return jax.tree.map(to_spec, params_shapes, axes_tree)
+
+
+def param_shardings(params_shapes, mesh: Mesh, fsdp: bool = False, rules=None):
+    specs = param_specs(params_shapes, mesh, fsdp=fsdp, rules=rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shapes, mesh: Mesh, rules=None):
+    """tokens/frames/patches: shard the leading batch dim over DP axes."""
+    rules = dict(rules or DEFAULT_RULES)
+
+    def to_spec(leaf):
+        axes = ("batch",) + (None,) * (leaf.ndim - 1)
+        return spec_for(leaf.shape, axes, mesh, rules)
+
+    return jax.tree.map(to_spec, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, rules=None):
+    """Decode cache: (L, B, S, KV, hd) -> B over DP, KV over model when it
+    divides; otherwise the seq dim takes the model axis (long-context)."""
+    rules = dict(rules or DEFAULT_RULES)
+    model_size = _axis_size(mesh, "model")
+
+    def to_spec(path, leaf):
+        name = _path_str(path)
+        if name.endswith("len"):
+            return spec_for(leaf.shape, ("batch",), mesh, rules)
+        if name.endswith("k") or name.endswith("v"):
+            kv = leaf.shape[3]
+            if kv % model_size == 0:
+                axes = (None, "batch", None, "kv_heads", None)
+            else:
+                axes = (None, "batch", "kv_seq", None, None)
+                rules2 = dict(rules)
+                rules2["kv_seq"] = "model"
+                return spec_for(leaf.shape, axes, mesh, rules2)
+            return spec_for(leaf.shape, axes, mesh, rules)
+        if name.endswith("conv"):
+            return spec_for(leaf.shape, (None, "batch", None, "mlp"), mesh, rules)
+        if name.endswith("ssm"):
+            return spec_for(leaf.shape, (None, "batch", "mlp", None, None), mesh, rules)
+        if name.endswith("memory"):
+            return spec_for(leaf.shape, ("batch", None, None), mesh, rules)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(to_spec, cache_shapes)

@@ -1,0 +1,223 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Implements the chunked SSD algorithm (quadratic intra-chunk + decayed
+inter-chunk state passing) for training/prefill, and the O(1)-per-token
+recurrent step for decode. Grouping G=1 (single B/C group broadcast over
+heads), depthwise causal conv of width 4, gated RMSNorm, SiLU.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # (B, W-1, conv_dim) last inputs of the causal conv
+    state: jax.Array  # (B, H, P, N) recurrent SSM state
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state  # x, B, C channels (G=1)
+
+
+def init_ssm(key, cfg: ModelConfig) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * cfg.d_inner + 2 * N + H  # z, x, B, C, dt
+    # Mamba2 reference init: A ~ -Uniform(1, 16); dt sampled log-uniform in
+    # [1e-3, 1e-1] through an inverse-softplus bias.
+    a_init = jax.random.uniform(k3, (H,), jnp.float32, 1.0, 16.0)
+    dt_init = jnp.exp(
+        jax.random.uniform(k3, (H,), jnp.float32) * (jnp.log(0.1) - jnp.log(1e-3))
+        + jnp.log(1e-3)
+    )
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # softplus^{-1}(dt)
+    return {
+        "in_proj": dense_init(k1, cfg.d_model, d_in_proj, dt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_dim(cfg)), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim(cfg),), dt),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": init_rmsnorm(cfg.d_inner, dt),
+        "out_proj": dense_init(k4, cfg.d_inner, cfg.d_model, dt),
+    }
+
+
+def _split_in_proj(z_x_b_c_dt: jax.Array, cfg: ModelConfig):
+    N = cfg.ssm_state
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    z, xbc, dt = jnp.split(z_x_b_c_dt, [di, 2 * di + 2 * N], axis=-1)
+    return z, xbc, dt  # xbc = [x, B, C] conv channels
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(W):  # W=4: unrolled taps, fused by XLA
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return out + b
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., T) -> (..., T, T) lower-tri segment sums; -inf above diagonal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, S, H, P) inputs (dt already applied by caller)
+    dA: jax.Array,  # (B, S, H)  = dt * A  (negative)
+    Bmat: jax.Array,  # (B, S, N)  G=1 group
+    Cmat: jax.Array,  # (B, S, N)
+    chunk: int,
+    initial_state: jax.Array | None = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    C_ = S // chunk
+
+    xc = x.reshape(Bsz, C_, chunk, H, P)
+    Ac = dA.reshape(Bsz, C_, chunk, H).transpose(0, 3, 1, 2)  # (B, H, C, L)
+    Bc = Bmat.reshape(Bsz, C_, chunk, N)
+    Cc = Cmat.reshape(Bsz, C_, chunk, N)
+
+    A_cumsum = jnp.cumsum(Ac, axis=-1)  # (B, H, C, L)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(Ac))  # (B, H, C, L, L)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum)  # (B, H, C, L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence (scan over chunks) — state kept in f32
+    # (recurrent accumulation; also keeps the scan carry type stable when
+    # activations are bf16)
+    chunk_decay = jnp.exp(A_cumsum[..., -1])  # (B, H, C) f32
+    s0 = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        state_in = carry  # (B, H, P, N) f32
+        chunk_state, decay = inp  # (B, H, P, N), (B, H)
+        state_out = state_in * decay[..., None, None] + chunk_state.astype(jnp.float32)
+        return state_out, state_in  # emit the state *entering* this chunk
+
+    states_t = states.astype(jnp.float32).transpose(1, 0, 2, 3, 4)  # (C,B,H,P,N)
+    decay_t = chunk_decay.transpose(2, 0, 1)  # (C, B, H)
+    final_state, entry_states = jax.lax.scan(step, s0, (states_t, decay_t))
+    entry_states = entry_states.transpose(1, 0, 2, 3, 4)  # (B, C, H, P, N)
+
+    # 4. contribution of the entering state to each position in the chunk
+    state_decay = jnp.exp(A_cumsum)  # (B, H, C, L)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, entry_states, state_decay)
+
+    y = (Y_diag + Y_off).astype(x.dtype).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+def apply_ssm(
+    params: Dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+) -> jax.Array:
+    y, _ = apply_ssm_with_state(params, x, cfg)
+    return y
+
+
+def apply_ssm_with_state(params: Dict, x: jax.Array, cfg: ModelConfig):
+    Bsz, S, _ = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs, Bmat, Cmat = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,)
+    xs_h = xs.reshape(Bsz, S, H, P)
+    x_dt = xs_h * dt[..., None].astype(xs.dtype)
+    dA = dt * A  # (B, S, H) fp32
+
+    # pad to a chunk multiple; padded steps are identity (dA=0, x=0) so the
+    # final state is exact for any S
+    S_pad = -(-S // cfg.ssm_chunk) * cfg.ssm_chunk
+    if S_pad != S:
+        pad = S_pad - S
+        x_dt = jnp.pad(x_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+
+    y, final_state = ssd_scan(x_dt, dA, Bmat, Cmat, cfg.ssm_chunk)
+    if S_pad != S:
+        y = y[:, :S]
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs_h
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return y @ params["out_proj"], final_state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim(cfg)), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    )
+
+
+def decode_ssm(
+    params: Dict,
+    x: jax.Array,  # (B, 1, D)
+    cache: SSMCache,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, SSMCache]:
+    """Single-token recurrent step: h <- exp(dt A) h + dt B x ; y = C h + D x."""
+    Bsz = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    zxbcdt = x[:, 0] @ params["in_proj"]  # (B, proj)
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+
+    # conv over the cached window + current input
+    window = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+
+    xs, Bmat, Cmat = jnp.split(xbc_t, [cfg.d_inner, cfg.d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    A = -jnp.exp(params["A_log"])  # (H,)
+    dA = jnp.exp(dt * A)  # (B, H)
+
+    xs_h = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bmat.astype(jnp.float32), xs_h)
+    state = cache.state * dA[..., None, None] + dBx  # (B, H, P, N)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cmat.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xs_h
+    y = y.reshape(Bsz, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]  # (B, 1, D)
+    return out, SSMCache(conv=new_conv, state=state)

@@ -1,0 +1,3 @@
+from repro.parallel.pipeline import make_pipeline_fn
+
+__all__ = ["make_pipeline_fn"]

@@ -1,0 +1,81 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+Stages are laid out along a mesh axis ("stage"); microbatches stream
+through the pipeline with the classic (n_micro + n_stages - 1)-tick
+schedule. Differentiable end-to-end (jax.grad flows through ppermute),
+so it composes with the training stack; validated against sequential
+execution in tests/test_pipeline.py.
+
+This is the PP building block for stacking the "pod" axis as a pipeline
+dimension at fleet scale (DESIGN.md §6); the dry-run cells use DP/TP/
+FSDP/EP+SP, and PP is exercised here as a first-class library feature.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def make_pipeline_fn(
+    mesh: Mesh,
+    stage_fn: Callable,  # (stage_params, x) -> y, same shape
+    n_stages: int,
+    axis: str = "stage",
+):
+    """Returns pipe(params_stacked, xs) -> ys.
+
+    params_stacked: pytree with leading dim n_stages (sharded over `axis`).
+    xs: (n_micro, mb, ...) microbatched inputs (replicated).
+    ys: (n_micro, mb, ...) outputs of the final stage (replicated).
+    """
+
+    def shard_body(params_local, xs):
+        # params_local: leading dim 1 (this device's stage)
+        params_stage = jax.tree.map(lambda a: a[0], params_local)
+        stage_idx = jax.lax.axis_index(axis)
+        n_micro = xs.shape[0]
+        T = n_micro + n_stages - 1
+        mb_shape = xs.shape[1:]
+
+        fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(carry, t):
+            buf, outs = carry  # buf: activation entering this device
+            inject = jnp.where(t < n_micro, t, 0)
+            x_in = jnp.where(stage_idx == 0, xs[inject], buf)
+            y = stage_fn(params_stage, x_in)
+            # last stage records its output at position t - (n_stages - 1)
+            out_slot = t - (n_stages - 1)
+            do_store = (stage_idx == n_stages - 1) & (out_slot >= 0)
+            outs = jax.lax.cond(
+                do_store,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(out_slot, 0), 0
+                ),
+                lambda o: o,
+                outs,
+            )
+            # shift activations forward one stage
+            buf_next = jax.lax.ppermute(y, axis, fwd_perm)
+            return (buf_next, outs), None
+
+        buf0 = jnp.zeros(mb_shape, xs.dtype)
+        outs0 = jnp.zeros((n_micro,) + mb_shape, xs.dtype)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(T))
+        # broadcast final outputs from the last stage to all devices
+        outs = jax.lax.psum(
+            jnp.where(stage_idx == n_stages - 1, outs, jnp.zeros_like(outs)), axis
+        )
+        return outs
+
+    return shard_map(
+        shard_body,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_rep=False,
+    )

@@ -1,0 +1,4 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.monitor import StepMonitor
+
+__all__ = ["Trainer", "TrainerConfig", "StepMonitor"]

@@ -1,0 +1,93 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler monitor,
+deterministic data order, crash-equivalent resume (tested).
+
+This is the host-side driver wrapping the jitted train_step; it is mesh-
+agnostic (works on 1 CPU device in tests and on the production mesh via
+launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.models.config import ModelConfig
+from repro.runtime.monitor import StepMonitor
+from repro.training import init_train_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "checkpoints"
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    microbatches: int = 1
+    base_lr: float = 3e-4
+    seed: int = 0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        trainer_cfg: TrainerConfig,
+        data_fn: Callable[[int], Dict],  # step -> batch (deterministic)
+        jit_kwargs: Optional[dict] = None,
+    ):
+        self.model_cfg = model_cfg
+        self.cfg = trainer_cfg
+        self.data_fn = data_fn
+        step_fn = make_train_step(
+            model_cfg,
+            microbatches=trainer_cfg.microbatches,
+            base_lr=trainer_cfg.base_lr,
+            total_steps=trainer_cfg.total_steps,
+        )
+        self.train_step = jax.jit(step_fn, donate_argnums=(0, 1), **(jit_kwargs or {}))
+        self.ckpt = CheckpointManager(
+            trainer_cfg.checkpoint_dir,
+            keep=trainer_cfg.keep_checkpoints,
+            async_save=trainer_cfg.async_checkpoint,
+        )
+        Path(trainer_cfg.checkpoint_dir).mkdir(parents=True, exist_ok=True)
+        self.monitor = StepMonitor(
+            heartbeat_path=Path(trainer_cfg.checkpoint_dir) / "heartbeat.json"
+        )
+        self.history = []
+
+    def init_or_restore(self):
+        params, opt_state = init_train_state(
+            jax.random.PRNGKey(self.cfg.seed), self.model_cfg
+        )
+        restored = self.ckpt.restore({"params": params, "opt": opt_state})
+        if restored is not None:
+            step, state = restored
+            return state["params"], state["opt"], step
+        return params, opt_state, 0
+
+    def run(self, crash_at: Optional[int] = None):
+        """Train to total_steps; ``crash_at`` simulates a failure (tests)."""
+        params, opt_state, start = self.init_or_restore()
+        step = start
+        while step < self.cfg.total_steps:
+            if crash_at is not None and step >= crash_at:
+                raise RuntimeError(f"simulated crash at step {step}")
+            batch = self.data_fn(step)
+            self.monitor.begin()
+            params, opt_state, metrics = self.train_step(params, opt_state, batch)
+            metrics["loss"].block_until_ready()
+            self.monitor.end()
+            step += 1
+            self.history.append(float(metrics["loss"]))
+            if step % self.cfg.checkpoint_every == 0 or step == self.cfg.total_steps:
+                self.ckpt.save(step, {"params": params, "opt": opt_state})
+        self.ckpt.wait()
+        return params, opt_state, step

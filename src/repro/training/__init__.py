@@ -1,0 +1,15 @@
+from repro.training import optimizers
+from repro.training.train_step import (
+    init_train_state,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "optimizers",
+    "init_train_state",
+    "make_prefill_step",
+    "make_serve_step",
+    "make_train_step",
+]

@@ -1,0 +1,188 @@
+"""Optimizers from scratch: AdamW (fp32 state) and Adafactor (factored).
+
+AdamW keeps fp32 m/v plus an fp32 master copy when params are low
+precision — the production recipe for <=80B configs. Adafactor keeps
+factored second moments and no master copy, which is what lets the
+0.5T-1T configs (arctic, kimi) fit 16GB/chip HBM (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any  # per-leaf state pytree
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamLeaf(NamedTuple):
+    m: jax.Array  # fp32
+    v: jax.Array  # fp32
+    master: jax.Array  # fp32 master weights ((1,) placeholder for fp32 params
+    # — they are their own master; avoids a redundant copy and buffer aliasing)
+
+
+def adamw_init(params) -> OptState:
+    def leaf(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if p.dtype == jnp.float32:
+            master = jnp.zeros((1,), jnp.float32)  # placeholder
+        else:
+            master = p.astype(jnp.float32)
+        return AdamLeaf(m=z, v=jnp.zeros(p.shape, jnp.float32), master=master)
+
+    return OptState(step=jnp.zeros((), jnp.int32), inner=jax.tree.map(leaf, params))
+
+
+def adamw_update(
+    grads,
+    state: OptState,
+    params,
+    lr: float | jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def leaf(g, s: AdamLeaf, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * s.m + (1 - b1) * gf
+        v = b2 * s.v + (1 - b2) * gf * gf
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        placeholder = s.master.shape != p.shape
+        master = p.astype(jnp.float32) if placeholder else s.master
+        master = master - lr * (update + weight_decay * master)
+        new_s = AdamLeaf(m=m, v=v, master=s.master if placeholder else master)
+        return master.astype(p.dtype), new_s
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state.inner)
+    flat_p = treedef.flatten_up_to(params)
+    outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_inner = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_params, OptState(step=step, inner=new_inner)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), simplified: factored v, no master copy
+# ---------------------------------------------------------------------------
+
+
+class FactorLeaf(NamedTuple):
+    v_row: jax.Array  # fp32, shape without last dim
+    v_col: jax.Array  # fp32, shape without second-to-last dim
+    v_full: jax.Array  # fp32 scalar-shaped fallback for rank<2 leaves
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> OptState:
+    def leaf(p):
+        if _factored(p):
+            return FactorLeaf(
+                v_row=jnp.zeros(p.shape[:-1], jnp.float32),
+                v_col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                v_full=jnp.zeros((1,), jnp.float32),
+            )
+        return FactorLeaf(
+            v_row=jnp.zeros((1,), jnp.float32),
+            v_col=jnp.zeros((1,), jnp.float32),
+            v_full=jnp.zeros(p.shape, jnp.float32),
+        )
+
+    return OptState(step=jnp.zeros((), jnp.int32), inner=jax.tree.map(leaf, params))
+
+
+def adafactor_update(
+    grads,
+    state: OptState,
+    params,
+    lr: float | jax.Array,
+    *,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t**-decay  # Adafactor schedule
+
+    def leaf(g, s: FactorLeaf, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p):
+            v_row = beta2 * s.v_row + (1 - beta2) * jnp.mean(g2, axis=-1)
+            v_col = beta2 * s.v_col + (1 - beta2) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(v_row, axis=-1, keepdims=True)
+            update = gf * jax.lax.rsqrt(v_row / jnp.maximum(row_mean, eps))[..., None]
+            update = update * jax.lax.rsqrt(v_col)[..., None, :]
+            new_s = FactorLeaf(v_row=v_row, v_col=v_col, v_full=s.v_full)
+        else:
+            v = beta2 * s.v_full + (1 - beta2) * g2
+            update = gf * jax.lax.rsqrt(v)
+            new_s = FactorLeaf(v_row=s.v_row, v_col=s.v_col, v_full=v)
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        pf = p.astype(jnp.float32)
+        new_p = pf - lr * (update + weight_decay * pf)
+        return new_p.astype(p.dtype), new_s
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state.inner)
+    flat_p = treedef.flatten_up_to(params)
+    outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_inner = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_params, OptState(step=step, inner=new_inner)
+
+
+# ---------------------------------------------------------------------------
+# Common utilities
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = base_lr * t / max(warmup, 1)
+    progress = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(t < warmup, warm, cos)
+
+
+def init_optimizer(name: str, params) -> OptState:
+    return {"adamw": adamw_init, "adafactor": adafactor_init}[name](params)
+
+
+def apply_optimizer(name: str, grads, state, params, lr):
+    fn = {"adamw": adamw_update, "adafactor": adafactor_update}[name]
+    return fn(grads, state, params, lr)

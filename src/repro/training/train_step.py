@@ -1,0 +1,120 @@
+"""Jittable train/serve steps.
+
+train_step: microbatched gradient accumulation (lax.scan) -> clip ->
+AdamW/Adafactor update with cosine schedule. Microbatching bounds the
+scan-over-layers carry memory at large (batch x seq); counts are chosen
+per (arch x shape) in launch/cells.py.
+
+serve_step: one-token decode against the preallocated cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.training import optimizers as opt_lib
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    """(B, ...) -> (n, B//n, ...) for every leaf."""
+    return jax.tree.map(lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    microbatches: int = 1,
+    dp_axes: Tuple[str, ...] | None = None,
+    accum_dtype=jnp.float32,  # bf16 halves the accumulator HBM (1T configs)
+    base_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    max_grad_norm: float = 1.0,
+    weight_decay: float = 0.1,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``dp_axes``: mesh axes carrying the batch shard. Required when
+    microbatching under pjit — the (B,) -> (mb, B/mb) reshape cannot keep
+    the shard on the new batch dim without an explicit constraint (GSPMD
+    falls back to full replication otherwise).
+    """
+
+    def loss_and_grad(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            model_lib.loss_fn, has_aux=True
+        )(params, mb, cfg)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state: opt_lib.OptState, batch: Dict):
+        if microbatches > 1:
+            mbs = _split_microbatches(batch, microbatches)
+            if dp_axes:
+                from jax.sharding import PartitionSpec as P
+
+                def constrain(x):
+                    spec = P(None, dp_axes, *([None] * (x.ndim - 2)))
+                    return jax.lax.with_sharding_constraint(x, spec)
+
+                mbs = jax.tree.map(constrain, mbs)
+
+            def accum(carry, mb):
+                gsum, lsum = carry
+                loss, _, grads = loss_and_grad(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), gsum, grads
+                )
+                return (gsum, lsum + loss), None
+
+            gsum0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(accum, (gsum0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = loss_and_grad(params, batch)
+
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, max_grad_norm)
+        # schedule uses the post-increment step (step 0 would give lr=0)
+        lr = opt_lib.cosine_schedule(
+            opt_state.step + 1, base_lr=base_lr, warmup=warmup, total=total_steps
+        )
+        params, opt_state = opt_lib.apply_optimizer(
+            cfg.optimizer, grads, opt_state, params, lr
+        )
+        metrics = dict(metrics)
+        metrics.update({"grad_norm": gnorm, "lr": lr, "step": opt_state.step})
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, tokens (B,1), cache) -> (next_tokens, logits, cache)."""
+
+    def serve_step(params, tokens, cache):
+        logits, cache = model_lib.decode_step(params, tokens, cache, cfg)
+        next_tokens = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tokens[:, None], logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, batch):
+        return model_lib.prefill(params, batch, cfg, max_seq)
+
+    return prefill_step
+
+
+def init_train_state(key, cfg: ModelConfig):
+    params = model_lib.init_params(key, cfg)
+    opt_state = opt_lib.init_optimizer(cfg.optimizer, params)
+    return params, opt_state

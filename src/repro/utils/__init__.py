@@ -1,0 +1,5 @@
+"""Small shared utilities: timing, rng, pytree helpers."""
+from repro.utils.timing import Timer, timed
+from repro.utils.trees import tree_bytes, tree_param_count
+
+__all__ = ["Timer", "timed", "tree_bytes", "tree_param_count"]

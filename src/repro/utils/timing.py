@@ -1,0 +1,39 @@
+"""Wall-clock timing helpers used by benchmarks and the runtime monitor."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Timer:
+    """Accumulating timer. ``with timer:`` adds elapsed seconds to .total."""
+
+    total: float = 0.0
+    count: int = 0
+    _t0: float = field(default=0.0, repr=False)
+
+    def __enter__(self) -> "Timer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.total += time.perf_counter() - self._t0
+        self.count += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / max(self.count, 1)
+
+
+@contextmanager
+def timed(label: str, sink=None):
+    """Context manager printing (or collecting) elapsed time."""
+    t0 = time.perf_counter()
+    yield
+    dt = time.perf_counter() - t0
+    if sink is not None:
+        sink[label] = sink.get(label, 0.0) + dt
+    else:
+        print(f"[timed] {label}: {dt:.4f}s")

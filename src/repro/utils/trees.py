@@ -1,0 +1,18 @@
+"""Pytree helpers (param counting, byte accounting) shared across subsystems."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    total = 0
+    for x in jax.tree.leaves(tree):
+        dt = getattr(x, "dtype", None)
+        itemsize = np.dtype(dt).itemsize if dt is not None else 4
+        total += int(np.prod(x.shape)) * itemsize
+    return total

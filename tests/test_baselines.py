@@ -1,0 +1,120 @@
+"""Baseline solver correctness (CD / SCD / FISTA / projections)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CDConfig, FISTAConfig, FWConfig, baselines, fw_solve
+from repro.core.projections import project_l1_ball, soft_threshold
+
+
+def _orthogonal_problem(m=64, p=32, seed=0):
+    """Design with orthonormal columns: closed-form Lasso solution."""
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, p))
+    Q, _ = np.linalg.qr(A)  # (m, p) orthonormal columns
+    coef = np.zeros(p)
+    coef[: p // 4] = rng.uniform(1.0, 5.0, p // 4)
+    y = Q @ coef + 0.01 * rng.standard_normal(m)
+    return jnp.asarray(Q.T, jnp.float32), jnp.asarray(y, jnp.float32)
+
+
+class TestCoordinateDescent:
+    def test_orthogonal_closed_form(self, rng_key):
+        Xt, y = _orthogonal_problem()
+        lam = 0.5
+        res = baselines.cd_solve(Xt, y, CDConfig(lam=lam, max_sweeps=200, tol=1e-10), rng_key)
+        expected = soft_threshold(Xt @ y, lam)  # X^T X = I
+        np.testing.assert_allclose(np.asarray(res.alpha), np.asarray(expected), atol=1e-5)
+
+    def test_stochastic_matches_cyclic(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        lam = float(jnp.max(jnp.abs(Xt @ y))) / 20
+        cyc = baselines.cd_solve(Xt, y, CDConfig(lam=lam, max_sweeps=500, tol=1e-8), rng_key)
+        sto = baselines.cd_solve(
+            Xt, y, CDConfig(lam=lam, max_sweeps=500, tol=1e-8, stochastic=True), rng_key
+        )
+        pen_c = float(cyc.objective) + lam * float(jnp.sum(jnp.abs(cyc.alpha)))
+        pen_s = float(sto.objective) + lam * float(jnp.sum(jnp.abs(sto.alpha)))
+        np.testing.assert_allclose(pen_s, pen_c, rtol=1e-3)
+
+    def test_null_solution_above_lambda_max(self, small_problem, rng_key):
+        """Paper §2.1: lam > ||X^T y||_inf => alpha* = 0."""
+        Xt, y, _ = small_problem
+        lam = float(jnp.max(jnp.abs(Xt @ y))) * 1.01
+        res = baselines.cd_solve(Xt, y, CDConfig(lam=lam, max_sweeps=50, tol=1e-10), rng_key)
+        assert int(res.active) == 0
+
+
+class TestFISTA:
+    def test_penalized_matches_cd(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        lam = float(jnp.max(jnp.abs(Xt @ y))) / 10
+        cd = baselines.cd_solve(Xt, y, CDConfig(lam=lam, max_sweeps=1000, tol=1e-9), rng_key)
+        fi = baselines.fista_solve(
+            Xt, y, FISTAConfig(lam=lam, max_iters=5000, tol=1e-9), rng_key
+        )
+        pen_cd = float(cd.objective) + lam * float(jnp.sum(jnp.abs(cd.alpha)))
+        pen_fi = float(fi.objective) + lam * float(jnp.sum(jnp.abs(fi.alpha)))
+        np.testing.assert_allclose(pen_fi, pen_cd, rtol=1e-3)
+
+    def test_constrained_feasible(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        delta = 30.0
+        res = baselines.fista_solve(
+            Xt, y, FISTAConfig(delta=delta, constrained=True, max_iters=2000, tol=1e-8),
+            rng_key,
+        )
+        assert float(jnp.sum(jnp.abs(res.alpha))) <= delta * (1 + 1e-4)
+
+    def test_lipschitz_estimate(self, rng_key):
+        rng = np.random.default_rng(3)
+        X = rng.standard_normal((40, 60)).astype(np.float32)
+        L_true = np.linalg.norm(X, 2) ** 2
+        L_est = float(baselines.estimate_lipschitz(jnp.asarray(X.T), 100, rng_key))
+        np.testing.assert_allclose(L_est, L_true, rtol=1e-3)
+
+
+class TestFormEquivalence:
+    def test_fw_matches_cd_at_equivalent_budget(self, small_problem, rng_key):
+        """Paper §2.1: solving (1) at delta = ||alpha*(lam)||_1 recovers the
+        same objective as the penalized solution."""
+        Xt, y, _ = small_problem
+        lam = float(jnp.max(jnp.abs(Xt @ y))) / 10
+        cd = baselines.cd_solve(Xt, y, CDConfig(lam=lam, max_sweeps=1000, tol=1e-10), rng_key)
+        delta = float(jnp.sum(jnp.abs(cd.alpha)))
+        fw = fw_solve(
+            Xt, y,
+            FWConfig(delta=delta, sampling="full", max_iters=100000, tol=1e-8),
+            rng_key,
+        )
+        assert float(fw.objective) <= float(cd.objective) * 1.02 + 1e-3
+
+
+class TestProjection:
+    def test_inside_ball_unchanged(self):
+        v = jnp.asarray([0.5, -0.25, 0.1])
+        out = project_l1_ball(v, 2.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(v))
+
+    def test_projection_norm(self):
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            v = jnp.asarray(rng.standard_normal(50).astype(np.float32) * 10)
+            out = project_l1_ball(v, 3.0)
+            assert float(jnp.sum(jnp.abs(out))) <= 3.0 * (1 + 1e-5)
+
+    def test_projection_optimality_small(self):
+        """Brute-force check in 2-D: projection is the closest feasible point."""
+        rng = np.random.default_rng(1)
+        for _ in range(20):
+            v = rng.standard_normal(2) * 4
+            proj = np.asarray(project_l1_ball(jnp.asarray(v, jnp.float32), 1.0))
+            # dense grid over the l1 ball boundary + interior
+            ts = np.linspace(-1, 1, 401)
+            xx, yy = np.meshgrid(ts, ts)
+            mask = np.abs(xx) + np.abs(yy) <= 1.0
+            pts = np.stack([xx[mask], yy[mask]], -1)
+            d_grid = np.min(((pts - v) ** 2).sum(-1))
+            d_proj = ((proj - v) ** 2).sum()
+            assert d_proj <= d_grid + 1e-3

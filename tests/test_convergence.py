@@ -1,0 +1,80 @@
+"""Empirical validation of the paper's convergence theory.
+
+Proposition 1/2: f(alpha_k) - f* <= 4 C_f / (k+2) (deterministic; in
+expectation for the stochastic rule). We fit the bound on small problems
+where f* is computable to high precision.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FWConfig, FISTAConfig, baselines, fw_solve_with_history
+
+
+def _fstar(Xt, y, delta, key):
+    res = baselines.fista_solve(
+        Xt, y, FISTAConfig(delta=delta, constrained=True, max_iters=20000, tol=1e-12),
+        key,
+    )
+    return float(res.objective)
+
+
+def _curvature_upper(Xt, delta):
+    """C_f <= diam^2 * L / 2 with diam_2(l1-ball) = 2*delta, L = ||X||_2^2.
+
+    (Jaggi 2013, for quadratics: C_f <= sup ||y-x||_H^2 over the ball.)
+    """
+    L = float(np.linalg.norm(np.asarray(Xt), 2) ** 2)
+    return 0.5 * (2 * delta) ** 2 * L
+
+
+class TestConvergenceRate:
+    def test_deterministic_rate(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        delta = 100.0
+        fstar = _fstar(Xt, y, delta, rng_key)
+        cfg = FWConfig(delta=delta, sampling="full", max_iters=10**6, tol=0.0,
+                       patience=10**9)
+        _, hist = fw_solve_with_history(Xt, y, cfg, rng_key, n_iters=400)
+        h = np.asarray(hist) - fstar
+        Cf = _curvature_upper(Xt, delta)
+        ks = np.arange(1, len(h) + 1)
+        bound = 4 * Cf / (ks + 2)
+        assert np.all(h[5:] <= bound[5:] + 1e-2), (
+            f"max violation {np.max(h[5:] - bound[5:])}"
+        )
+
+    def test_stochastic_rate_in_expectation(self, small_problem):
+        """Average over seeds approximates E[f(a_k)] - f* <= 4 C~_f/(k+2)."""
+        Xt, y, _ = small_problem
+        delta = 100.0
+        fstar = _fstar(Xt, y, delta, jax.random.PRNGKey(0))
+        cfg = FWConfig(delta=delta, sampling="uniform", kappa=60, max_iters=10**6,
+                       tol=0.0, patience=10**9)
+        hists = []
+        for seed in range(8):
+            _, hist = fw_solve_with_history(
+                Xt, y, cfg, jax.random.PRNGKey(seed), n_iters=400
+            )
+            hists.append(np.asarray(hist))
+        mean_h = np.mean(hists, axis=0) - fstar
+        Cf = _curvature_upper(Xt, delta)
+        ks = np.arange(1, len(mean_h) + 1)
+        bound = 4 * Cf / (ks + 2)
+        assert np.all(mean_h[5:] <= bound[5:] + 1e-2)
+
+    def test_rate_is_sublinear_not_stalled(self, small_problem, rng_key):
+        """h_k must actually decrease ~1/k: check h_{4k} < h_k/2 roughly."""
+        Xt, y, _ = small_problem
+        delta = 100.0
+        fstar = _fstar(Xt, y, delta, rng_key)
+        cfg = FWConfig(delta=delta, sampling="uniform", kappa=60, max_iters=10**6,
+                       tol=0.0, patience=10**9)
+        _, hist = fw_solve_with_history(Xt, y, cfg, rng_key, n_iters=512)
+        h = np.asarray(hist) - fstar
+        floor = 1e-6 * float(0.5 * jnp.dot(y, y))
+        h = np.maximum(h, floor)
+        # either strictly decreasing in the 1/k regime, or already at floor
+        assert h[400] < h[100] or h[400] <= floor
+        assert h[-1] < 0.25 * h[10] or h[-1] <= floor

@@ -1,0 +1,72 @@
+"""Distributed FW (shard_map) == single-device FW, run on 8 host devices
+in a subprocess so the main test process keeps 1 device (DESIGN.md rule)."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import FWConfig, fw_solve
+    from repro.core.distributed import make_distributed_solver
+    from repro.data import make_regression, standardize
+
+    ds = standardize(make_regression(m=96, p=512, n_informative=10, noise=0.5, seed=3))
+    Xt = jnp.asarray(ds.X.T.copy()); y = jnp.asarray(ds.y)
+    delta = 120.0
+    cfg = FWConfig(delta=delta, sampling="uniform", kappa=64, max_iters=600,
+                   tol=0.0, patience=10**9)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    solver = make_distributed_solver(mesh, cfg, n_iters=600)
+    with mesh:
+        alpha_d, obj_d, dots_d = solver(Xt, y, jax.random.PRNGKey(0))
+    obj_direct = 0.5 * float(jnp.sum((jnp.asarray(alpha_d) @ Xt - y) ** 2))
+
+    ref = fw_solve(Xt, y, cfg, jax.random.PRNGKey(0))
+    out = {
+        "obj_dist": float(obj_d),
+        "obj_direct": obj_direct,
+        "obj_ref": float(ref.objective),
+        "l1": float(jnp.sum(jnp.abs(alpha_d))),
+        "delta": delta,
+        "active": int(jnp.sum(jnp.asarray(alpha_d) != 0)),
+    }
+    print("RESULT" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def dist_result():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src"),
+             "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+class TestDistributedFW:
+    def test_objective_recursion_consistent(self, dist_result):
+        r = dist_result
+        assert abs(r["obj_dist"] - r["obj_direct"]) / max(r["obj_direct"], 1) < 1e-3
+
+    def test_matches_single_device_quality(self, dist_result):
+        r = dist_result
+        # same kappa/iteration budget => same optimization quality band
+        assert r["obj_dist"] <= r["obj_ref"] * 1.05 + 1e-3
+
+    def test_feasible(self, dist_result):
+        r = dist_result
+        assert r["l1"] <= r["delta"] * (1 + 1e-4)
+
+    def test_sparse_iterates(self, dist_result):
+        assert dist_result["active"] <= 601

@@ -1,0 +1,86 @@
+"""Dry-run machinery integration tests (single process, 1 device):
+roofline HLO parsing, model_flops accounting, cell plan coverage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import roofline as rf
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import cells as cell_lib
+
+
+class TestHLOParsing:
+    def test_parse_collectives_counts_and_bytes(self):
+        hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[64,512]{1,0} all-gather(%y), dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(%z), dimensions={0}
+  %a2a = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(%a, %b)
+  %cp = u32[8]{0} collective-permute(%c), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%p, %q)
+"""
+        t = rf.parse_collectives(hlo)
+        assert t["all-reduce"]["count"] == 1
+        assert t["all-reduce"]["result_bytes"] == 128 * 256 * 4
+        assert t["all-reduce"]["wire_bytes"] == 2 * 128 * 256 * 4
+        assert t["all-gather"]["count"] == 1
+        assert t["all-gather"]["wire_bytes"] == 64 * 512 * 2
+        assert t["reduce-scatter"]["count"] == 1
+        assert t["all-to-all"]["result_bytes"] == 2 * 16 * 16 * 4
+        assert t["collective-permute"]["wire_bytes"] == 8 * 4
+
+    def test_async_start_variants_counted(self):
+        hlo = "%ar = f32[64]{0} all-reduce-start(%x)\n"
+        t = rf.parse_collectives(hlo)
+        assert t["all-reduce"]["count"] == 1
+
+    def test_non_collective_lines_ignored(self):
+        hlo = "%d = f32[1024,1024]{1,0} dot(%a, %b)\n%c = f32[4]{0} constant({1,2,3,4})\n"
+        t = rf.parse_collectives(hlo)
+        assert all(v["count"] == 0 for v in t.values())
+
+
+class TestModelFlops:
+    def test_train_flops_formula(self):
+        cfg = get_config("deepseek_7b")
+        f = rf.model_flops(cfg, "train", 4096, 256)
+        n = rf.active_params(cfg)
+        assert f == pytest.approx(6 * n * 4096 * 256)
+
+    def test_decode_flops_per_token(self):
+        cfg = get_config("qwen2_72b")
+        f = rf.model_flops(cfg, "decode", 32768, 128)
+        n = rf.active_params(cfg)
+        assert f == pytest.approx(2 * n * 128)
+
+
+class TestCellPlan:
+    def test_40_cells(self):
+        cells = list(cell_lib.iter_cells())
+        assert len(cells) == 40
+
+    def test_skips_match_design(self):
+        skipped = {(a, s) for a, s, r in cell_lib.iter_cells() if r}
+        assert ("mamba2_130m", "long_500k") not in skipped
+        assert ("hymba_1_5b", "long_500k") not in skipped
+        assert ("qwen2_72b", "long_500k") in skipped
+        assert ("gemma2_9b", "long_500k") in skipped  # global layers quadratic
+        assert len(skipped) == 8
+
+    def test_input_specs_cover_all_inputs(self):
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            batch = cell_lib.batch_specs_for(cfg, cell_lib.SHAPES["train_4k"])
+            assert "tokens" in batch
+            if cfg.n_prefix_embeds:
+                assert "patches" in batch
+            if cfg.n_enc_layers:
+                assert "frames" in batch
+            toks, cache = cell_lib.decode_inputs_for(cfg, cell_lib.SHAPES["decode_32k"])
+            assert toks.shape == (128, 1)
+            assert "len" in cache
+
+    def test_microbatches_defined_for_all(self):
+        for arch in ARCH_IDS:
+            assert arch in cell_lib.TRAIN_MICROBATCHES

@@ -1,0 +1,112 @@
+"""ElasticNet-FW and logistic-FW extensions (paper §6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FISTAConfig, FWConfig, baselines
+from repro.core.fw_elasticnet import en_solve
+from repro.core.fw_logistic import logistic_solve
+
+
+class TestElasticNetFW:
+    def _augmented_reference(self, Xt, y, delta, l2, key):
+        """ElasticNet == Lasso on the augmented design [X; sqrt(l2) I]."""
+        p, m = Xt.shape
+        aug = jnp.concatenate(
+            [Xt, jnp.sqrt(l2) * jnp.eye(p, dtype=Xt.dtype)], axis=1
+        )  # (p, m+p) feature-major
+        y_aug = jnp.concatenate([y, jnp.zeros((p,), y.dtype)])
+        cfg = FISTAConfig(delta=delta, constrained=True, max_iters=8000, tol=1e-10)
+        return baselines.fista_solve(aug, y_aug, cfg, key)
+
+    def test_matches_augmented_fista(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        delta, l2 = 50.0, 0.5
+        ref = self._augmented_reference(Xt, y, delta, l2, rng_key)
+        res = en_solve(
+            Xt, y,
+            FWConfig(delta=delta, sampling="full", max_iters=30000, tol=1e-7),
+            l2, rng_key,
+        )
+        ref_obj = float(ref.objective)  # 1/2||aug a - y_aug||^2 == EN objective
+        assert float(res.objective) <= ref_obj * 1.02 + 1e-3
+
+    def test_l2_shrinks_solution(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=100.0, sampling="full", max_iters=20000, tol=1e-6)
+        weak = en_solve(Xt, y, cfg, 1e-6, rng_key)
+        strong = en_solve(Xt, y, cfg, 50.0, rng_key)
+        assert float(jnp.max(jnp.abs(strong.alpha))) < float(jnp.max(jnp.abs(weak.alpha)))
+
+    def test_reduces_to_lasso_at_zero_l2(self, small_problem, rng_key):
+        from repro.core import fw_solve
+
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=80.0, sampling="full", max_iters=20000, tol=1e-7)
+        en = en_solve(Xt, y, cfg, 0.0, rng_key)
+        fw = fw_solve(Xt, y, cfg, rng_key)
+        np.testing.assert_allclose(
+            float(en.objective), float(fw.objective), rtol=1e-4
+        )
+
+    def test_stochastic_feasible(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=30.0, sampling="uniform", kappa=60, max_iters=5000, tol=1e-5)
+        res = en_solve(Xt, y, cfg, 1.0, rng_key)
+        assert float(jnp.sum(jnp.abs(res.alpha))) <= 30.0 * (1 + 1e-4)
+        assert bool(jnp.isfinite(res.objective))
+
+
+class TestLogisticFW:
+    def _data(self, m=120, p=80, seed=0):
+        rng = np.random.default_rng(seed)
+        X = rng.standard_normal((m, p)).astype(np.float32)
+        w = np.zeros(p, np.float32)
+        w[:5] = rng.standard_normal(5) * 2
+        y = np.sign(X @ w + 0.1 * rng.standard_normal(m)).astype(np.float32)
+        y[y == 0] = 1.0
+        return jnp.asarray(X.T), jnp.asarray(y)
+
+    def test_loss_decreases_below_chance(self, rng_key):
+        Xt, y = self._data()
+        m = y.shape[0]
+        cfg = FWConfig(delta=20.0, sampling="full", max_iters=3000, tol=1e-7)
+        res = logistic_solve(Xt, y, cfg, rng_key)
+        chance = m * np.log(2.0)
+        assert float(res.objective) < 0.5 * chance
+
+    def test_matches_projected_gradient_reference(self, rng_key):
+        """FW reaches the same constrained optimum as slow projected GD."""
+        from repro.core.projections import project_l1_ball
+
+        Xt, y = self._data(seed=1)
+        delta = 5.0
+        cfg = FWConfig(delta=delta, sampling="full", max_iters=5000, tol=1e-9)
+        res = logistic_solve(Xt, y, cfg, rng_key)
+
+        def loss(a):
+            return jnp.sum(jnp.logaddexp(0.0, -y * (a @ Xt)))
+
+        a = jnp.zeros(Xt.shape[0])
+        g = jax.grad(loss)
+        for _ in range(3000):
+            a = project_l1_ball(a - 0.01 * g(a), delta)
+        ref = float(loss(a))
+        assert float(res.objective) <= ref * 1.02 + 1e-2
+
+    def test_classification_accuracy(self, rng_key):
+        Xt, y = self._data(seed=2)
+        cfg = FWConfig(delta=20.0, sampling="uniform", kappa=40, max_iters=4000, tol=1e-7)
+        res = logistic_solve(Xt, y, cfg, rng_key)
+        pred = jnp.sign(res.alpha @ Xt)
+        acc = float(jnp.mean(pred == y))
+        assert acc > 0.9
+
+    def test_sparsity_and_feasibility(self, rng_key):
+        Xt, y = self._data(seed=3)
+        cfg = FWConfig(delta=3.0, sampling="uniform", kappa=40, max_iters=200,
+                       tol=0.0, patience=10**9)
+        res = logistic_solve(Xt, y, cfg, rng_key)
+        assert float(jnp.sum(jnp.abs(res.alpha))) <= 3.0 * (1 + 1e-4)
+        assert int(res.active) <= 201

@@ -1,0 +1,156 @@
+"""Unit tests for the stochastic Frank-Wolfe Lasso solver (paper Alg. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FWConfig,
+    baselines,
+    duality_gap,
+    fw_lasso,
+    fw_solve,
+    fw_solve_with_history,
+)
+from repro.core.solver_config import FISTAConfig
+
+DELTA = 150.0
+
+
+def _fista_ref(Xt, y, delta, key):
+    cfg = FISTAConfig(delta=delta, constrained=True, max_iters=5000, tol=1e-9)
+    return baselines.fista_solve(Xt, y, cfg, key)
+
+
+class TestFWSolve:
+    def test_feasibility(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        for sampling in ("full", "uniform", "block"):
+            cfg = FWConfig(
+                delta=DELTA, sampling=sampling, kappa=60, block_size=30,
+                max_iters=5000, tol=1e-6,
+            )
+            res = fw_solve(Xt, y, cfg, rng_key)
+            assert float(jnp.sum(jnp.abs(res.alpha))) <= DELTA * (1 + 1e-5)
+
+    def test_matches_fista_constrained(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        ref = _fista_ref(Xt, y, DELTA, rng_key)
+        cfg = FWConfig(delta=DELTA, sampling="full", max_iters=20000, tol=1e-7)
+        res = fw_solve(Xt, y, cfg, rng_key)
+        assert res.objective <= ref.objective * 1.01 + 1e-3
+
+    def test_stochastic_matches_deterministic(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        det = fw_solve(
+            Xt, y, FWConfig(delta=DELTA, sampling="full", max_iters=20000, tol=1e-7),
+            rng_key,
+        )
+        sto = fw_solve(
+            Xt, y,
+            FWConfig(delta=DELTA, sampling="uniform", kappa=100, max_iters=40000,
+                     tol=1e-7),
+            rng_key,
+        )
+        assert float(sto.objective) <= float(det.objective) * 1.02 + 1e-3
+
+    def test_objective_recursion_consistency(self, small_problem, rng_key):
+        """The S/F recursion objective must equal the direct residual norm."""
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=DELTA, sampling="uniform", kappa=64, max_iters=500,
+                       tol=0.0, patience=10**9)
+        res, _ = fw_solve_with_history(Xt, y, cfg, rng_key, n_iters=500)
+        direct = 0.5 * jnp.sum((res.alpha @ Xt - y) ** 2)
+        np.testing.assert_allclose(
+            float(res.objective), float(direct), rtol=1e-4, atol=1e-2
+        )
+
+    def test_monotone_decrease_full_sampling(self, small_problem, rng_key):
+        """Exact line search + full sampling => nonincreasing objective."""
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=DELTA, sampling="full", max_iters=200, tol=0.0,
+                       patience=10**9)
+        _, hist = fw_solve_with_history(Xt, y, cfg, rng_key, n_iters=200)
+        hist = np.asarray(hist)
+        assert np.all(hist[1:] <= hist[:-1] * (1 + 1e-5) + 1e-3)
+
+    def test_sparsity_bound(self, medium_problem, rng_key):
+        """FW iterates have at most k+1 active coordinates after k steps (§3.1)."""
+        Xt, y, _ = medium_problem
+        for k in (5, 17, 49):
+            cfg = FWConfig(delta=80.0, sampling="uniform", kappa=128,
+                           max_iters=k, tol=0.0, patience=10**9)
+            res = fw_solve(Xt, y, cfg, rng_key)
+            assert int(res.active) <= k + 1
+
+    def test_duality_gap_bounds_suboptimality(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=DELTA, sampling="full", max_iters=3000, tol=1e-7)
+        res = fw_solve(Xt, y, cfg, rng_key)
+        state = fw_lasso.init_state(Xt, y, rng_key, res.alpha)
+        gap = float(duality_gap(Xt, state, DELTA))
+        ref = _fista_ref(Xt, y, DELTA, rng_key)
+        subopt = float(res.objective - ref.objective)
+        assert gap >= subopt - 1e-2  # gap upper-bounds primal suboptimality
+        assert gap >= -1e-3  # gap is nonnegative
+
+    def test_warm_start_from_solution_terminates_fast(self, small_problem, rng_key):
+        """Restarting from the solution must stop almost immediately."""
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=DELTA, sampling="full", max_iters=20000, tol=1e-6)
+        cold = fw_solve(Xt, y, cfg, rng_key)
+        warm = fw_solve(Xt, y, cfg, rng_key, cold.alpha)
+        assert int(warm.iterations) <= int(cold.iterations) + 5
+        assert float(warm.objective) <= float(cold.objective) * (1 + 1e-5)
+
+    def test_line_search_optimal(self, small_problem, rng_key):
+        """lambda from eq. (8) must be a 1-D minimizer along the FW segment."""
+        Xt, y, _ = small_problem
+        stats = fw_lasso.precompute_colstats(Xt, y)
+        state = fw_lasso.init_state(Xt, y, rng_key)
+        cfg = FWConfig(delta=DELTA, sampling="full", max_iters=10, tol=0.0)
+        # take a few steps, then verify stationarity numerically
+        for _ in range(5):
+            state = fw_lasso.fw_step(Xt, y, stats, state, cfg)
+        alpha = state.scale * state.beta
+
+        def f(a):
+            return 0.5 * jnp.sum((a @ Xt - y) ** 2)
+
+        # recompute the FW vertex and optimal lambda at this iterate
+        grad = -(Xt @ state.resid)
+        i_star = int(jnp.argmax(jnp.abs(grad)))
+        d_t = -DELTA * float(jnp.sign(grad[i_star]))
+        direction = -alpha
+        direction = direction.at[i_star].add(d_t)
+        lam_grid = jnp.linspace(0.0, 1.0, 101)
+        vals = jax.vmap(lambda l: f(alpha + l * direction))(lam_grid)
+        lam_best = lam_grid[int(jnp.argmin(vals))]
+        # closed-form lambda
+        g_lin = grad[i_star] + stats.zty[i_star]
+        num = state.s_quad - d_t * grad[i_star] - state.f_lin
+        den = state.s_quad - 2 * d_t * g_lin + d_t**2 * stats.znorm2[i_star]
+        lam_cf = float(jnp.clip(num / den, 0.0, 1.0))
+        assert abs(lam_cf - float(lam_best)) <= 0.02  # grid resolution
+
+    def test_block_sampling_nondivisible(self, rng_key):
+        """Tail-wrapping block sampling stays in range and converges."""
+        from repro.data import make_regression, standardize
+
+        ds = standardize(make_regression(m=50, p=307, n_informative=5, seed=2))
+        Xt = jnp.asarray(ds.X.T.copy())
+        y = jnp.asarray(ds.y)
+        cfg = FWConfig(delta=50.0, sampling="block", kappa=64, block_size=32,
+                       max_iters=3000, tol=1e-6)
+        res = fw_solve(Xt, y, cfg, rng_key)
+        assert bool(jnp.isfinite(res.objective))
+        assert float(jnp.sum(jnp.abs(res.alpha))) <= 50.0 * (1 + 1e-5)
+
+    def test_dot_product_accounting(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        kappa = 64
+        n_iters = 100
+        cfg = FWConfig(delta=DELTA, sampling="uniform", kappa=kappa,
+                       max_iters=n_iters, tol=0.0, patience=10**9)
+        res = fw_solve(Xt, y, cfg, rng_key)
+        assert int(res.n_dots) == kappa * n_iters

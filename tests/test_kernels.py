@@ -1,0 +1,138 @@
+"""Per-kernel interpret-mode validation against pure-jnp oracles,
+with hypothesis shape/dtype sweeps (brief deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import colstats, fw_vertex, residual_update, sampled_scores
+from repro.kernels.colstats.ref import colstats_ref
+from repro.kernels.fw_grad.ref import sampled_argmax_ref, sampled_scores_ref
+from repro.kernels.residual_update.ref import residual_update_ref
+
+I = dict(interpret=True)
+
+
+def _problem(p, m, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    Xt = jnp.asarray(rng.standard_normal((p, m)).astype(dtype))
+    r = jnp.asarray(rng.standard_normal(m).astype(dtype))
+    return Xt, r
+
+
+class TestFWGradKernel:
+    def test_matches_ref_basic(self):
+        Xt, r = _problem(1024, 512, 0)
+        blk = jnp.asarray([0, 3, 1], jnp.int32)
+        got = sampled_scores(Xt, r, blk, block_size=256, m_tile=256, **I)
+        want, _ = sampled_scores_ref(Xt, r, blk, 256)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+    def test_vertex_matches_ref(self):
+        Xt, r = _problem(2048, 128, 1)
+        blk = jnp.asarray([7, 0, 5, 2], jnp.int32)
+        i_k, g_k = fw_vertex(Xt, r, blk, block_size=256, m_tile=128, **I)
+        i_r, g_r = sampled_argmax_ref(Xt, r, blk, 256)
+        assert int(i_k) == int(i_r)
+        np.testing.assert_allclose(float(g_k), float(g_r), rtol=2e-5, atol=2e-4)
+
+    def test_single_mtile_fallback(self):
+        Xt, r = _problem(512, 300, 2)  # m=300 not divisible by default tile
+        blk = jnp.asarray([1, 0], jnp.int32)
+        got = sampled_scores(Xt, r, blk, block_size=256, **I)
+        want, _ = sampled_scores_ref(Xt, r, blk, 256)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        nb=st.integers(1, 6),
+        mt_pow=st.integers(5, 8),
+        seed=st.integers(0, 100),
+        bs=st.sampled_from([128, 256]),
+    )
+    def test_hypothesis_shape_sweep(self, nb, mt_pow, seed, bs):
+        m = 2**mt_pow
+        p = bs * 16
+        Xt, r = _problem(p, m, seed)
+        rng = np.random.default_rng(seed)
+        blk = jnp.asarray(rng.choice(p // bs, nb, replace=False).astype(np.int32))
+        got = sampled_scores(Xt, r, blk, block_size=bs, m_tile=min(m, 512), **I)
+        want, _ = sampled_scores_ref(Xt, r, blk, bs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        Xt, r = _problem(512, 256, 3, dtype=np.float32)
+        Xt = Xt.astype(dtype)
+        r = r.astype(dtype)
+        blk = jnp.asarray([0, 1], jnp.int32)
+        got = sampled_scores(Xt, r, blk, block_size=256, m_tile=256, **I)
+        want, _ = sampled_scores_ref(Xt.astype(jnp.float32), r.astype(jnp.float32), blk, 256)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol * 10)
+
+
+class TestResidualUpdateKernel:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        m = 4096
+        r, y, z = (jnp.asarray(rng.standard_normal(m).astype(np.float32)) for _ in range(3))
+        lam = jnp.asarray(0.37)
+        dt = jnp.asarray(-2.5)
+        got = residual_update(r, y, z, lam, dt, **I)
+        want = residual_update_ref(r, y, z, lam, dt)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([128, 512, 777, 2048, 5000]),
+        lam=st.floats(0.0, 1.0),
+        seed=st.integers(0, 50),
+    )
+    def test_hypothesis_sweep(self, m, lam, seed):
+        rng = np.random.default_rng(seed)
+        r, y, z = (jnp.asarray(rng.standard_normal(m).astype(np.float32)) for _ in range(3))
+        got = residual_update(r, y, z, jnp.asarray(lam), jnp.asarray(1.5), **I)
+        want = residual_update_ref(r, y, z, lam, 1.5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+class TestColstatsKernel:
+    def test_matches_ref(self):
+        Xt, y = _problem(1024, 512, 4)
+        zty, zn2 = colstats(Xt, y, p_tile=256, m_tile=256, **I)
+        zty_r, zn2_r = colstats_ref(Xt, y)
+        np.testing.assert_allclose(np.asarray(zty), np.asarray(zty_r), rtol=2e-5, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(zn2), np.asarray(zn2_r), rtol=2e-5, atol=2e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        pt=st.sampled_from([128, 256]),
+        m=st.sampled_from([64, 500, 1024]),
+        seed=st.integers(0, 50),
+    )
+    def test_hypothesis_sweep(self, pt, m, seed):
+        p = pt * 4
+        Xt, y = _problem(p, m, seed)
+        zty, zn2 = colstats(Xt, y, p_tile=pt, m_tile=512, **I)
+        zty_r, zn2_r = colstats_ref(Xt, y)
+        np.testing.assert_allclose(np.asarray(zty), np.asarray(zty_r), rtol=2e-5, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(zn2), np.asarray(zn2_r), rtol=2e-5, atol=2e-4)
+
+
+class TestKernelSolverIntegration:
+    def test_kernel_vertex_equals_solver_scores(self):
+        """The kernel's vertex choice must match the solver's jnp gather path."""
+        from repro.data import make_regression, standardize
+
+        ds = standardize(make_regression(m=64, p=1024, n_informative=8, seed=5))
+        Xt = jnp.asarray(ds.X.T.copy())
+        r = jnp.asarray(ds.y)  # residual at alpha=0 is y
+        blk = jnp.asarray([0, 2, 3], jnp.int32)
+        i_k, g_k = fw_vertex(Xt, r, blk, block_size=256, m_tile=64, **I)
+        idx = (blk[:, None] * 256 + jnp.arange(256)[None, :]).reshape(-1)
+        grad_s = -(jnp.take(Xt, idx, axis=0) @ r)
+        j = jnp.argmax(jnp.abs(grad_s))
+        assert int(i_k) == int(idx[j])
+        np.testing.assert_allclose(float(g_k), float(grad_s[j]), rtol=2e-5, atol=1e-4)

@@ -1,0 +1,73 @@
+"""Pipeline parallelism == sequential execution (forward and gradients).
+Runs on 4 forced host devices in a subprocess (device-count isolation)."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.parallel import make_pipeline_fn
+
+    n_stages, n_micro, mb, d = 4, 8, 2, 16
+    mesh = jax.make_mesh((n_stages,), ("stage",))
+    key = jax.random.PRNGKey(0)
+    Ws = jax.random.normal(key, (n_stages, d, d)) / jnp.sqrt(d)
+    params = {"w": Ws}
+    xs = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+
+    def stage_fn(p, x):
+        return jnp.tanh(x @ p["w"])
+
+    pipe = make_pipeline_fn(mesh, stage_fn, n_stages)
+    with mesh:
+        ys = jax.jit(pipe)(params, xs)
+
+    # sequential reference
+    ref = xs
+    for s in range(n_stages):
+        ref = jnp.tanh(ref @ Ws[s])
+    fwd_err = float(jnp.max(jnp.abs(ys - ref)))
+
+    # gradient equivalence
+    tgt = jax.random.normal(jax.random.PRNGKey(2), ys.shape)
+    def loss_pipe(params):
+        with mesh:
+            return jnp.mean((pipe(params, xs) - tgt) ** 2)
+    def loss_seq(params):
+        h = xs
+        for s in range(n_stages):
+            h = jnp.tanh(h @ params["w"][s])
+        return jnp.mean((h - tgt) ** 2)
+    g_pipe = jax.grad(loss_pipe)(params)["w"]
+    g_seq = jax.grad(loss_seq)(params)["w"]
+    grad_err = float(jnp.max(jnp.abs(g_pipe - g_seq)))
+    print("RESULT" + json.dumps({"fwd_err": fwd_err, "grad_err": grad_err}))
+""")
+
+
+@pytest.fixture(scope="module")
+def pipe_result():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src"),
+             "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_pipeline_forward_matches_sequential(pipe_result):
+    assert pipe_result["fwd_err"] < 1e-5
+
+
+def test_pipeline_gradients_match_sequential(pipe_result):
+    assert pipe_result["grad_err"] < 1e-5

@@ -1,0 +1,127 @@
+"""Data pipeline / monitor / optimizer unit tests."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.lm_pipeline import PrefetchingLoader, batch_at_step
+from repro.runtime.monitor import StepMonitor
+from repro.training import optimizers as opt
+
+
+class TestDataPipeline:
+    def test_step_addressable_determinism(self):
+        cfg = get_config("deepseek_7b").reduced()
+        a = batch_at_step(cfg, 7, batch=4, seq_len=32, seed=3)
+        b = batch_at_step(cfg, 7, batch=4, seq_len=32, seed=3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_different_steps_differ(self):
+        cfg = get_config("deepseek_7b").reduced()
+        a = batch_at_step(cfg, 1, batch=4, seq_len=32, seed=3)
+        b = batch_at_step(cfg, 2, batch=4, seq_len=32, seed=3)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_tokens_in_vocab(self):
+        cfg = get_config("gemma2_9b").reduced()
+        b = batch_at_step(cfg, 0, batch=8, seq_len=64, seed=0)
+        assert b["tokens"].min() >= 0
+        assert b["tokens"].max() < cfg.vocab_size
+
+    def test_multimodal_keys(self):
+        vlm = get_config("internvl2_76b").reduced()
+        b = batch_at_step(vlm, 0, batch=2, seq_len=16, seed=0)
+        assert "patches" in b
+        audio = get_config("seamless_m4t_medium").reduced()
+        b = batch_at_step(audio, 0, batch=2, seq_len=16, seed=0)
+        assert "frames" in b
+
+    def test_prefetching_loader_order(self):
+        cfg = get_config("deepseek_7b").reduced()
+        loader = PrefetchingLoader(cfg, batch=2, seq_len=16, seed=1, start_step=5)
+        try:
+            s0, b0 = next(loader)
+            s1, b1 = next(loader)
+            assert (s0, s1) == (5, 6)
+            ref = batch_at_step(cfg, 5, batch=2, seq_len=16, seed=1)
+            np.testing.assert_array_equal(b0["tokens"], ref["tokens"])
+        finally:
+            loader.close()
+
+
+class TestMonitor:
+    def test_straggler_detection(self):
+        mon = StepMonitor(ewma_alpha=0.5, straggler_factor=2.0)
+        for _ in range(5):
+            mon.begin()
+            time.sleep(0.01)
+            assert not mon.end()
+        mon.begin()
+        time.sleep(0.08)
+        assert mon.end()  # 8x the EWMA -> flagged
+        assert mon.stragglers == [6]
+
+    def test_heartbeat(self, tmp_path):
+        hb = tmp_path / "hb.json"
+        mon = StepMonitor(heartbeat_path=hb)
+        mon.begin()
+        mon.end()
+        import json
+
+        data = json.loads(hb.read_text())
+        assert data["step"] == 1
+
+
+class TestOptimizers:
+    def test_adamw_moves_toward_gradient(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = opt.adamw_init(params)
+        grads = {"w": jnp.ones((4,), jnp.bfloat16)}
+        new, state = opt.adamw_update(grads, state, params, lr=0.1, weight_decay=0.0)
+        assert float(new["w"][0]) < 1.0
+
+    def test_adamw_fp32_master_used_for_bf16(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = opt.adamw_init(params)
+        assert state.inner["w"].master.shape == (4,)
+        params32 = {"w": jnp.ones((4,), jnp.float32)}
+        state32 = opt.adamw_init(params32)
+        assert state32.inner["w"].master.shape == (1,)  # placeholder
+
+    def test_adafactor_factored_shapes(self):
+        params = {"w": jnp.ones((8, 16)), "b": jnp.ones((16,))}
+        state = opt.adafactor_init(params)
+        assert state.inner["w"].v_row.shape == (8,)
+        assert state.inner["w"].v_col.shape == (16,)
+        assert state.inner["b"].v_full.shape == (16,)
+
+    def test_adafactor_descends_quadratic(self):
+        A = jnp.asarray(np.random.default_rng(0).standard_normal((16, 8)), jnp.float32)
+        x_true = jnp.ones((8, 4))
+
+        params = {"w": jnp.zeros((8, 4))}
+        state = opt.adafactor_init(params)
+        losses = []
+        for _ in range(200):
+            def loss_fn(p):
+                return jnp.mean((A @ p["w"] - A @ x_true) ** 2)
+            loss, g = jax.value_and_grad(loss_fn)(params)
+            params, state = opt.adafactor_update(g, state, params, lr=0.05)
+            losses.append(float(loss))
+        assert losses[-1] < 0.05 * losses[0]
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((4,), 10.0)}
+        clipped, norm = opt.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(20.0)
+        assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+    def test_cosine_schedule_shape(self):
+        lr0 = float(opt.cosine_schedule(jnp.asarray(1), base_lr=1.0, warmup=10, total=100))
+        lr_mid = float(opt.cosine_schedule(jnp.asarray(50), base_lr=1.0, warmup=10, total=100))
+        lr_end = float(opt.cosine_schedule(jnp.asarray(100), base_lr=1.0, warmup=10, total=100))
+        assert lr0 == pytest.approx(0.1)
+        assert 0.1 < lr_end < lr_mid < 1.0
