@@ -54,6 +54,44 @@ def run(csv: CSV):
     )
     csv.emit("kernel/residual_update", t_int3 * 1e6, "fused_3read_1write")
 
+    # padded-tail geometry (p % block_size != 0 — DESIGN.md §Padding);
+    # the sampled blocks must include the partially-zero tail brick
+    Xt_pad = jnp.asarray(rng.standard_normal((p + 100, m)).astype(np.float32))
+    tail = -(-(p + 100) // bs) - 1
+    blk_pad = jnp.asarray([0, 5, 9, tail], jnp.int32)
+    t_pad = _time(
+        lambda: sampled_scores(Xt_pad, r, blk_pad, block_size=bs, m_tile=256, interpret=True)
+    )
+    csv.emit(
+        "kernel/fw_grad_padded", t_pad * 1e6,
+        f"p={p+100};pad_to={-(-(p+100)//bs)*bs};interpret_us={t_pad*1e6:.0f}",
+    )
+
+    # end-to-end solver step: both backends on the SAME fixed-iteration run
+    from repro.core import FWConfig, fw_solve
+
+    rng2 = np.random.default_rng(1)
+    p2, m2 = 2048, 256
+    Xt2 = jnp.asarray(rng2.standard_normal((p2, m2)).astype(np.float32))
+    y2 = jnp.asarray(rng2.standard_normal(m2).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    times = {}
+    for backend in ("xla", "pallas"):
+        cfg = FWConfig(
+            delta=25.0, sampling="block", kappa=256, block_size=128,
+            max_iters=200, tol=0.0, patience=10**9, backend=backend,
+        )
+        times[backend] = _time(lambda cfg=cfg: fw_solve(Xt2, y2, cfg, key).alpha, n=3)
+        csv.emit(
+            f"solver/fw_solve_{backend}", times[backend] * 1e6 / 200,
+            f"m={m2};p={p2};kappa=256;iters=200;"
+            f"mode={'interpret' if backend == 'pallas' else 'native'}",
+        )
+    csv.emit(
+        "solver/backend_ratio", times["pallas"] / times["xla"] * 100,
+        "pallas_over_xla_pct (interpret-mode CPU; TPU geometry is the target)",
+    )
+
 
 if __name__ == "__main__":
     run(CSV())

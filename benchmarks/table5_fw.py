@@ -1,5 +1,9 @@
 """Paper Table 5: stochastic FW at |S| = 1%, 2%, 3% of p over the path —
-time, speedup vs CD, iterations, dot products, mean active features."""
+time, speedup vs CD, iterations, dot products, mean active features.
+
+Both path drivers are timed per sampling fraction: the sequential
+``fw_path`` and the batched-lane ``fw_path_batched`` (DESIGN.md §Path),
+with the batched row recording its speedup over sequential."""
 from __future__ import annotations
 
 import time
@@ -43,6 +47,20 @@ def run(csv: CSV, datasets=None):
                 f"iters={res.total_iters};dots={res.total_dots};"
                 f"mean_active={res.mean_active:.1f};"
                 f"dots_vs_cd={cd_res.total_dots / max(res.total_dots,1):.1f}x",
+            )
+
+            lane_width = max(1, -(-N_POINTS // 8))
+            t0 = time.perf_counter()
+            res_b = path_lib.fw_path_batched(Xt, y, deltas, cfg, lane_width=lane_width)
+            dt_b = time.perf_counter() - t0
+            csv.emit(
+                f"table5/{name}/fw_{int(frac*100)}pct_batched",
+                dt_b * 1e6 / N_POINTS,
+                f"m={m};p={p};kappa={kappa};lane_width={lane_width};"
+                f"chunks={-(-N_POINTS // lane_width)};"
+                f"speedup_vs_seq={dt/dt_b:.1f}x;speedup_vs_cd={cd_time/dt_b:.1f}x;"
+                f"iters={res_b.total_iters};dots={res_b.total_dots};"
+                f"mean_active={res_b.mean_active:.1f}",
             )
 
 

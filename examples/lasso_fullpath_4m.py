@@ -42,6 +42,10 @@ def main():
     ap.add_argument("--m", type=int, default=800)
     ap.add_argument("--points", type=int, default=100)
     ap.add_argument("--frac", type=float, default=0.01, help="|S| as fraction of p")
+    ap.add_argument("--driver", choices=("sequential", "batched"), default="batched",
+                    help="fw_path (one delta at a time) or fw_path_batched lanes")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
+                    help="iteration engine; 'pallas' uses the fused TPU kernels")
     args = ap.parse_args()
     p = 4_272_227 if args.paper_size else args.p
 
@@ -61,12 +65,19 @@ def main():
     # smaller scale in benchmarks/ — too expensive at p~10^6 for a demo.
     delta_max = 0.5 * float(np.abs(ds.coef).sum())
     deltas = path_lib.delta_grid(delta_max, n_points=args.points)
-    cfg = FWConfig(delta=1.0, kappa=kappa, sampling="uniform",
-                   max_iters=5000, tol=1e-3)
+    # pallas wants aligned blocks (uniform degrades to width-1 bricks that
+    # leave the MXU idle — DESIGN.md §4.5); block sampling preserves Lemma 1
+    sampling = "block" if args.backend == "pallas" else "uniform"
+    cfg = FWConfig(delta=1.0, kappa=kappa, sampling=sampling,
+                   max_iters=5000, tol=1e-3, backend=args.backend)
 
-    print(f"== full path: {args.points} points, kappa={kappa:,} ({args.frac:.0%} of p)")
+    print(f"== full path: {args.points} points, kappa={kappa:,} ({args.frac:.0%} of p), "
+          f"driver={args.driver}, backend={args.backend}")
     t0 = time.perf_counter()
-    res = path_lib.fw_path(Xt, y, deltas, cfg)
+    if args.driver == "batched":
+        res = path_lib.fw_path_batched(Xt, y, deltas, cfg)
+    else:
+        res = path_lib.fw_path(Xt, y, deltas, cfg)
     dt = time.perf_counter() - t0
     print(f"   PATH DONE in {dt:.1f}s  ({dt/args.points*1000:.0f} ms/point)")
     print(f"   total iters={res.total_iters} dots={res.total_dots:,} "

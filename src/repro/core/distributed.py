@@ -44,11 +44,18 @@ class DistFWState(NamedTuple):
     key: jax.Array
 
 
-def _fw_shard_step(Xt_l, y_l, zty_l, zn2_l, state: DistFWState, cfg: FWConfig):
-    """Body executed per (data, model) shard under shard_map."""
+def _fw_shard_step(
+    Xt_l, y_l, zty_l, zn2_l, state: DistFWState, cfg: FWConfig, n_model: int
+):
+    """Body executed per (data, model) shard under shard_map.
+
+    ``n_model`` is the static "model"-axis size, passed down from the mesh:
+    it sizes the per-shard sample, so it must be a Python int at trace time
+    (the pinned JAX has no ``jax.lax.axis_size``; ``psum(1, axis)`` would be
+    traced and could not shape ``idx``).
+    """
     p_local = Xt_l.shape[0]
     model_idx = jax.lax.axis_index("model")
-    n_model = jax.lax.axis_size("model")
 
     key = jax.random.fold_in(state.key, state.k)
     # every model shard uses a distinct sampling stream
@@ -141,6 +148,8 @@ def make_distributed_solver(mesh: Mesh, cfg: FWConfig, n_iters: int):
     """
     from jax.experimental.shard_map import shard_map
 
+    n_model = int(mesh.shape["model"])
+
     def shard_body(Xt_l, y_l, key):
         p_local = Xt_l.shape[0]
         zty_l = jax.lax.psum(Xt_l @ y_l, "data")  # full z^T y, local features
@@ -159,7 +168,7 @@ def make_distributed_solver(mesh: Mesh, cfg: FWConfig, n_iters: int):
         )
 
         def body(s, _):
-            return _fw_shard_step(Xt_l, y_l, zty_l, zn2_l, s, cfg), None
+            return _fw_shard_step(Xt_l, y_l, zty_l, zn2_l, s, cfg, n_model), None
 
         state, _ = jax.lax.scan(body, state, None, length=n_iters)
         alpha_l = state.scale * state.beta

@@ -25,7 +25,13 @@ Implementation notes (beyond the paper, recorded in DESIGN.md):
     ||alpha^{k+1} - alpha^k||_inf <= eps stopping rule without O(p) work.
     Because a sampled iteration can legitimately produce lambda = 0 (the
     sample contained no descent vertex), the rule only fires after
-    ``patience`` consecutive sub-tolerance steps.
+    ``patience`` consecutive sub-tolerance steps. A step whose sampled
+    duality gap sits below the fp32 noise floor of its own terms also
+    counts as a stall (``gap_rtol``, DESIGN.md §Stopping) so warm starts
+    from a converged iterate terminate immediately;
+  * ``cfg.backend`` selects the iteration engine: 'xla' (jnp gathers) or
+    'pallas' (the fused TPU kernels under repro.kernels; interpret mode
+    off-TPU), with zero-padded feature tails for non-divisible shapes.
 """
 from __future__ import annotations
 
@@ -36,6 +42,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.solver_config import FWConfig
+from repro.kernels.colstats.colstats import colstats as _colstats_kernel
+from repro.kernels.fw_grad.ops import fw_vertex as _fw_vertex_kernel
+from repro.kernels.padding import pad_rows as _pad_features
+from repro.kernels.residual_update.residual_update import (
+    residual_update as _residual_update_kernel,
+)
+
+
+def _use_interpret(cfg: FWConfig) -> bool:
+    """Pallas kernels compile natively on TPU, interpret everywhere else."""
+    if cfg.interpret is not None:
+        return cfg.interpret
+    return jax.default_backend() != "tpu"
 
 
 class ColStats(NamedTuple):
@@ -71,10 +90,21 @@ class FWResult(NamedTuple):
     converged: jax.Array
 
 
-def precompute_colstats(Xt: jax.Array, y: jax.Array) -> ColStats:
-    """One full pass over X: z_i^T y and ||z_i||^2 for every column (§4.2)."""
-    zty = Xt @ y
-    znorm2 = jnp.sum(Xt * Xt, axis=1)
+def precompute_colstats(
+    Xt: jax.Array, y: jax.Array, cfg: Optional[FWConfig] = None
+) -> ColStats:
+    """One full pass over X: z_i^T y and ||z_i||^2 for every column (§4.2).
+
+    With ``cfg.backend == 'pallas'`` the fused single-sweep kernel
+    (repro.kernels.colstats) computes both statistics in one HBM pass.
+    """
+    if cfg is not None and cfg.backend == "pallas":
+        zty, znorm2 = _colstats_kernel(
+            Xt, y, m_tile=cfg.m_tile, interpret=_use_interpret(cfg)
+        )
+    else:
+        zty = Xt @ y
+        znorm2 = jnp.sum(Xt * Xt, axis=1)
     return ColStats(zty=zty, znorm2=znorm2, yty=jnp.dot(y, y))
 
 
@@ -114,6 +144,16 @@ def init_state(
     )
 
 
+def _sample_block_starts(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
+    """Aligned block starts for 'block' sampling, clamped so the number of
+    requested blocks never exceeds the number of available blocks (choice
+    without replacement would otherwise error for kappa//bs > ceil(p/bs))."""
+    bs = cfg.block_size
+    total = -(-p // bs)  # ceil
+    nblocks = min(max(cfg.kappa // bs, 1), total)
+    return jax.random.choice(key, total, (nblocks,), replace=False).astype(jnp.int32)
+
+
 def _sample_indices(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
     """Draw the sampling set S (paper §4.1 / §4.5).
 
@@ -127,13 +167,49 @@ def _sample_indices(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
     if cfg.sampling == "uniform":
         return jax.random.randint(key, (cfg.kappa,), 0, p)
     if cfg.sampling == "block":
-        bs = cfg.block_size
-        nblocks = max(cfg.kappa // bs, 1)
-        total = -(-p // bs)  # ceil; tail block wraps (documented in DESIGN.md)
-        starts = jax.random.choice(key, total, (nblocks,), replace=False)
-        idx = starts[:, None] * bs + jnp.arange(bs)[None, :]
-        return idx.reshape(-1) % p
+        starts = _sample_block_starts(key, p, cfg)
+        idx = starts[:, None] * cfg.block_size + jnp.arange(cfg.block_size)[None, :]
+        return idx.reshape(-1) % p  # tail block wraps (documented in DESIGN.md)
     raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
+
+
+def _kernel_vertex(
+    Xt: jax.Array, resid: jax.Array, key: jax.Array, p: int, cfg: FWConfig
+):
+    """Sampled FW vertex via the Pallas scalar-prefetch gather kernel.
+
+    'block'/'full' drive block_size-wide aligned bricks; 'uniform' degrades
+    to width-1 blocks (same index stream as the XLA gather path). Returns
+    (i_star, g_star, n_scored). ``Xt`` may carry zero-padded trailing rows
+    (p_valid masks them out of the argmax).
+    """
+    if cfg.sampling == "uniform":
+        # same draw as the XLA path: the backends replay one index stream
+        blk = _sample_indices(key, p, cfg).astype(jnp.int32)
+        bs = 1
+    elif cfg.sampling == "block":
+        blk = _sample_block_starts(key, p, cfg)
+        bs = cfg.block_size
+    elif cfg.sampling == "full":
+        bs = cfg.block_size
+        blk = jnp.arange(-(-p // bs), dtype=jnp.int32)
+    else:
+        raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
+    i_star, g_star = _fw_vertex_kernel(
+        Xt,
+        resid,
+        blk,
+        block_size=bs,
+        m_tile=cfg.m_tile,
+        interpret=_use_interpret(cfg),
+        p_valid=p,
+    )
+    # dot-product accounting parity with the XLA path: 'full' scores every
+    # REAL coordinate once (padded rows are free zeros, not sampled work);
+    # 'block' counts nblocks*bs either way (the XLA path's wrapped tail
+    # duplicates coords just as the kernel path's tail pads them).
+    n_scored = p if cfg.sampling == "full" else blk.shape[0] * bs
+    return i_star, g_star, n_scored
 
 
 def fw_step(
@@ -149,19 +225,26 @@ def fw_step(
     ``delta`` may be a traced array: the l1 radius enters the math only
     through scalar formulas, so keeping it dynamic lets a whole
     regularization path reuse ONE compiled solver (§Perf).
+
+    ``Xt`` may be feature-padded (``_pad_features``) when
+    ``cfg.backend == 'pallas'``; all other state stays at the true p,
+    which is read off ``stats``.
     """
-    p = Xt.shape[0]
+    p = stats.zty.shape[0]
     delta = cfg.delta if delta is None else delta
     key, sub = jax.random.split(state.key)
-    idx = _sample_indices(sub, p, cfg)
 
     # -- step 2: method of residuals on the sampled coordinates (eq. 7) ----
-    rows = jnp.take(Xt, idx, axis=0)  # (|S|, m) contiguous row gather
-    grad_s = -(rows @ state.resid)  # (|S|,)
-
-    j = jnp.argmax(jnp.abs(grad_s))
-    i_star = idx[j]
-    g_star = grad_s[j]
+    if cfg.backend == "pallas":
+        i_star, g_star, n_scored = _kernel_vertex(Xt, state.resid, sub, p, cfg)
+    else:
+        idx = _sample_indices(sub, p, cfg)
+        rows = jnp.take(Xt, idx, axis=0)  # (|S|, m) contiguous row gather
+        grad_s = -(rows @ state.resid)  # (|S|,)
+        j = jnp.argmax(jnp.abs(grad_s))
+        i_star = idx[j]
+        g_star = grad_s[j]
+        n_scored = idx.shape[0]
 
     # -- step 3: FW vertex sign (eq. 6) -------------------------------------
     delta_t = -delta * jnp.sign(g_star)  # delta-tilde
@@ -189,7 +272,13 @@ def fw_step(
 
     # -- step 6: residual update (eq. 10) -----------------------------------
     z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
-    resid = one_m * state.resid + lam * (y - delta_t * z_star)
+    if cfg.backend == "pallas":
+        resid = _residual_update_kernel(
+            state.resid, y, z_star, lam, delta_t,
+            m_tile=cfg.m_tile, interpret=_use_interpret(cfg),
+        )
+    else:
+        resid = one_m * state.resid + lam * (y - delta_t * z_star)
 
     # -- S/F scalar recursions (paper, below eq. 8) --------------------------
     s_quad = (
@@ -210,7 +299,15 @@ def fw_step(
     alpha_istar_new = scale * beta[i_star]
     step_inf = lam * jnp.maximum(state.maxabs, jnp.abs(delta_t - alpha_istar_old))
     maxabs = jnp.maximum(one_m * state.maxabs, jnp.abs(alpha_istar_new))
-    stall = jnp.where(step_inf <= cfg.tol, state.stall + 1, 0)
+    # ``num`` is the sampled FW duality gap g_S = alpha^T grad + delta |g*|
+    # (exact gap under full sampling). A step whose gap is below the fp32
+    # rounding floor of its own terms cannot make real progress, but its
+    # micro step can still exceed ``tol`` through the maxabs-inflated bound
+    # above — warm starts from a converged iterate would otherwise
+    # micro-oscillate for many iterations (DESIGN.md §Stopping).
+    gap_scale = state.s_quad + jnp.abs(state.f_lin) + jnp.abs(delta_t * g_star)
+    no_progress = num <= cfg.gap_rtol * gap_scale
+    stall = jnp.where((step_inf <= cfg.tol) | no_progress, state.stall + 1, 0)
 
     return FWState(
         beta=beta,
@@ -221,7 +318,7 @@ def fw_step(
         maxabs=maxabs,
         step_inf=step_inf,
         stall=stall,
-        n_dots=state.n_dots + idx.shape[0],
+        n_dots=state.n_dots + n_scored,
         k=state.k + 1,
         key=key,
     )
@@ -259,9 +356,11 @@ def fw_solve(
     ``patience`` consecutive iterations, or max_iters. ``delta`` (traced)
     overrides cfg.delta — one compile serves the whole path."""
     delta = jnp.asarray(cfg.delta if delta is None else delta)
-    stats = precompute_colstats(Xt, y)
+    stats = precompute_colstats(Xt, y, cfg)
     state0 = init_state(Xt, y, key, alpha0)
     patience = _patience(cfg)
+    if cfg.backend == "pallas" and cfg.sampling != "uniform":
+        Xt = _pad_features(Xt, cfg.block_size)  # once, outside the hot loop
 
     def cond(state: FWState):
         return (state.k < cfg.max_iters) & (state.stall < patience)
@@ -294,8 +393,10 @@ def fw_solve_with_history(
 
     Returns (result, objective_history[n_iters]).
     """
-    stats = precompute_colstats(Xt, y)
+    stats = precompute_colstats(Xt, y, cfg)
     state0 = init_state(Xt, y, key, alpha0)
+    if cfg.backend == "pallas" and cfg.sampling != "uniform":
+        Xt = _pad_features(Xt, cfg.block_size)
 
     def body(state, _):
         new = fw_step(Xt, y, stats, state, cfg, jnp.asarray(cfg.delta))

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -15,6 +16,14 @@ class FWConfig:
         or 'full' (deterministic FW).
       block_size: aligned block width for 'block' sampling.
       max_iters / tol: the paper's ||alpha^{k+1}-alpha^k||_inf <= eps rule.
+      gap_rtol: a step whose sampled duality gap (the line-search numerator,
+        DESIGN.md §Stopping) is below gap_rtol * the gap's own fp32 scale is
+        counted as a stall — it is indistinguishable from rounding noise.
+      backend: 'xla' (plain jnp gathers) or 'pallas' (the fused kernels in
+        repro.kernels drive the hot loop; interpret mode off-TPU).
+      m_tile: sample-dimension tile for the Pallas kernels.
+      interpret: force Pallas interpret mode; None = auto (interpret
+        everywhere except on real TPU devices).
     """
 
     delta: float
@@ -27,6 +36,10 @@ class FWConfig:
     refresh_every: int = 64  # recompute S/F from residuals (fp32 drift control)
     eps_den: float = 1e-12
     renorm_threshold: float = 1e-6
+    gap_rtol: float = 1e-6
+    backend: str = "xla"
+    m_tile: int = 512
+    interpret: Optional[bool] = None
 
 
 @dataclass(frozen=True)

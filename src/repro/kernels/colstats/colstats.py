@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.padding import pad_rows
+
 
 def _kernel(x_ref, y_ref, zty_ref, zn2_ref):
     j = pl.program_id(1)
@@ -43,10 +45,12 @@ def colstats(
     interpret: bool = False,
 ):
     p, m = Xt.shape
-    assert p % p_tile == 0, (p, p_tile)
+    # zero-pad trailing rows; their stats are 0 and sliced off below
+    Xt = pad_rows(Xt, p_tile)
+    p_pad = Xt.shape[0]
     if m % m_tile != 0:
         m_tile = m
-    grid = (p // p_tile, m // m_tile)
+    grid = (p_pad // p_tile, m // m_tile)
     zty, zn2 = pl.pallas_call(
         _kernel,
         grid=grid,
@@ -59,10 +63,10 @@ def colstats(
             pl.BlockSpec((1, p_tile), lambda i, j: (0, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((1, p), jnp.float32),
-            jax.ShapeDtypeStruct((1, p), jnp.float32),
+            jax.ShapeDtypeStruct((1, p_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, p_pad), jnp.float32),
         ],
         interpret=interpret,
         name="fw_colstats",
     )(Xt, y.reshape(1, m))
-    return zty.reshape(p), zn2.reshape(p)
+    return zty.reshape(p_pad)[:p], zn2.reshape(p_pad)[:p]

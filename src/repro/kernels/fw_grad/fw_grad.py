@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.padding import pad_rows
+
 
 def _kernel(blk_ref, x_ref, r_ref, out_ref):
     """One (block_size x m_tile) brick: accumulate -X r into scores."""
@@ -50,10 +52,17 @@ def sampled_scores(
     m_tile: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """Scores (nb * block_size,) for the sampled coordinates."""
+    """Scores (nb * block_size,) for the sampled coordinates.
+
+    Non-divisible shapes are handled by fallbacks rather than asserts:
+    ``p % block_size != 0`` zero-pads the trailing rows of ``Xt`` (padded
+    coordinates score exactly 0 — callers that must never select them mask
+    by global index, see ``ops.fw_vertex``), and ``m % m_tile != 0`` drops
+    to a single m tile.
+    """
     p, m = Xt.shape
     nb = blk.shape[0]
-    assert p % block_size == 0, (p, block_size)
+    Xt = pad_rows(Xt, block_size)
     if m % m_tile != 0:
         m_tile = m  # small-m fallback: single tile
     m_tiles = m // m_tile

@@ -4,10 +4,16 @@
 (paper eq. 9) — global coordinate index and its gradient value. The Pallas
 kernel produces the fused gathered-block scores; the O(kappa) argmax runs
 in XLA. On CPU the kernel executes in interpret mode (TPU is the target).
+
+When ``p_valid`` is given (required whenever ``p % block_size != 0``, see
+DESIGN.md §Padding), coordinates at global index >= p_valid are zero-padded
+rows of ``Xt``; they are excluded from the argmax so the selected vertex is
+always a real predictor.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +22,7 @@ from repro.kernels.fw_grad.fw_grad import sampled_scores
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_size", "m_tile", "interpret")
+    jax.jit, static_argnames=("block_size", "m_tile", "interpret", "p_valid")
 )
 def fw_vertex(
     Xt: jax.Array,
@@ -26,10 +32,14 @@ def fw_vertex(
     block_size: int = 256,
     m_tile: int = 512,
     interpret: bool = False,
+    p_valid: Optional[int] = None,
 ):
     scores = sampled_scores(
         Xt, r, blk, block_size=block_size, m_tile=m_tile, interpret=interpret
     )
     idx = (blk[:, None] * block_size + jnp.arange(block_size)[None, :]).reshape(-1)
-    j = jnp.argmax(jnp.abs(scores))
+    mag = jnp.abs(scores)
+    if p_valid is not None:
+        mag = jnp.where(idx < p_valid, mag, -1.0)
+    j = jnp.argmax(mag)
     return idx[j], scores[j]

@@ -1,0 +1,21 @@
+"""Shared feature-row zero-padding for the kernel grid geometry.
+
+All kernel grids tile the feature axis in fixed-size bricks; non-divisible
+p is handled by zero-padding trailing rows rather than asserting
+(DESIGN.md §Padding). Padded rows score exactly 0 in the sampled-gradient
+kernel and are masked out of the argmax, so they are never selected. This
+is the ONE definition of that padding — the solver pre-pads once per solve
+with it, and the kernel wrappers apply it defensively for direct calls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_rows(Xt: jax.Array, multiple: int) -> jax.Array:
+    """Zero-pad Xt's leading (feature) axis up to a multiple of ``multiple``."""
+    pad_p = -Xt.shape[0] % multiple
+    if pad_p:
+        Xt = jnp.pad(Xt, ((0, pad_p), (0, 0)))
+    return Xt

@@ -19,7 +19,11 @@ from jax.experimental.pallas import tpu as pltpu
 def _kernel(scal_ref, r_ref, y_ref, z_ref, out_ref):
     lam = scal_ref[0]
     dt = scal_ref[1]
-    out_ref[...] = (1.0 - lam) * r_ref[...] + lam * (y_ref[...] - dt * z_ref[...])
+    # accumulate in f32 (lam/dt live in SMEM as f32; inputs may be bf16)
+    r = r_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    out_ref[...] = ((1.0 - lam) * r + lam * (y - dt * z)).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("m_tile", "interpret"))

@@ -1,0 +1,35 @@
+"""Import-or-stub hypothesis so collection never hard-fails.
+
+When hypothesis is installed the real API is re-exported. When it is
+missing, only the @given property tests skip — the plain tests in the
+same module keep running (the container's minimal image has no
+hypothesis; see requirements-dev.txt).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Absorbs any decoration-time strategy construction without
+        crashing — st.integers(...), @st.composite, composite calls — the
+        decorated test is skipped anyway. Every attribute access and call
+        returns the stub itself."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _StrategyStub()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

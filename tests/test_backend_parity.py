@@ -1,0 +1,203 @@
+"""Kernel-backed solver backend vs the plain-XLA path (ISSUE 1 tentpole).
+
+Three layers of parity, none requiring hypothesis (these must run in the
+minimal CI image):
+  * interpret-mode kernels vs their pure-jnp oracles on NON-DIVISIBLE
+    shapes (p % block_size != 0, m % m_tile != 0) and both dtypes;
+  * fw_solve(backend='pallas') vs fw_solve(backend='xla') end to end;
+  * fw_path_batched vs sequential fw_path, compiling the lane solver
+    exactly once.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FWConfig, fw_solve, path as path_lib
+from repro.core.fw_lasso import _sample_indices
+from repro.kernels import colstats, fw_vertex, residual_update, sampled_scores
+from repro.kernels.colstats.ref import colstats_ref
+from repro.kernels.fw_grad.ref import sampled_scores_ref
+from repro.kernels.residual_update.ref import residual_update_ref
+
+I = dict(interpret=True)
+DELTA = 150.0
+
+
+def _problem(p, m, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    Xt = jnp.asarray(rng.standard_normal((p, m)).astype(dtype))
+    r = jnp.asarray(rng.standard_normal(m).astype(dtype))
+    return Xt, r
+
+
+class TestKernelPaddingParity:
+    """p % block_size != 0 and m % m_tile != 0 must not hit asserts."""
+
+    @pytest.mark.parametrize("p,m,bs,mt", [(300, 80, 128, 512), (777, 300, 256, 128)])
+    def test_sampled_scores_nondivisible(self, p, m, bs, mt):
+        Xt, r = _problem(p, m, 0)
+        nb_total = -(-p // bs)
+        blk = jnp.arange(nb_total, dtype=jnp.int32)  # includes the padded tail
+        got = sampled_scores(Xt, r, blk, block_size=bs, m_tile=mt, **I)
+        idx = np.asarray(blk)[:, None] * bs + np.arange(bs)[None, :]
+        idx = idx.reshape(-1)
+        valid = idx < p
+        want = -(np.take(np.asarray(Xt), idx[valid], axis=0) @ np.asarray(r))
+        np.testing.assert_allclose(
+            np.asarray(got)[valid], want, rtol=2e-5, atol=2e-4
+        )
+        # padded coordinates score exactly zero
+        np.testing.assert_array_equal(np.asarray(got)[~valid], 0.0)
+
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    def test_sampled_scores_dtypes_padded(self, dtype):
+        Xt, r = _problem(300, 96, 1)
+        Xt, r = Xt.astype(dtype), r.astype(dtype)
+        blk = jnp.asarray([0, 2], jnp.int32)  # block 2 covers rows 256..299 + pad
+        got = sampled_scores(Xt, r, blk, block_size=128, m_tile=96, **I)
+        want, idx = sampled_scores_ref(
+            Xt.astype(jnp.float32), r.astype(jnp.float32), blk, 128
+        )
+        valid = np.asarray(idx) < 300
+        tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(got)[valid], np.asarray(want)[valid], rtol=tol, atol=tol * 10
+        )
+
+    def test_fw_vertex_masks_padded_coordinates(self):
+        p, m = 130, 64
+        Xt, r = _problem(p, m, 2)
+        blk = jnp.arange(-(-p // 128), dtype=jnp.int32)  # 2 blocks, 126 padded rows
+        i_star, g_star = fw_vertex(Xt, r, blk, block_size=128, m_tile=m, p_valid=p, **I)
+        assert int(i_star) < p
+        grad = -(np.asarray(Xt) @ np.asarray(r))
+        assert int(i_star) == int(np.argmax(np.abs(grad)))
+        np.testing.assert_allclose(float(g_star), grad[int(i_star)], rtol=2e-5, atol=2e-4)
+
+    @pytest.mark.parametrize("p,m,pt,mt", [(300, 80, 256, 512), (777, 130, 128, 64)])
+    def test_colstats_nondivisible(self, p, m, pt, mt):
+        Xt, y = _problem(p, m, 3)
+        zty, zn2 = colstats(Xt, y, p_tile=pt, m_tile=mt, **I)
+        assert zty.shape == (p,) and zn2.shape == (p,)
+        zty_r, zn2_r = colstats_ref(Xt, y)
+        np.testing.assert_allclose(np.asarray(zty), np.asarray(zty_r), rtol=2e-5, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(zn2), np.asarray(zn2_r), rtol=2e-5, atol=2e-4)
+
+    @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+    def test_residual_update_nondivisible_dtypes(self, dtype):
+        rng = np.random.default_rng(4)
+        m = 777  # not divisible by any default tile
+        r, y, z = (
+            jnp.asarray(rng.standard_normal(m).astype(np.float32)).astype(dtype)
+            for _ in range(3)
+        )
+        got = residual_update(r, y, z, jnp.asarray(0.25), jnp.asarray(-1.5), **I)
+        want = residual_update_ref(
+            r.astype(jnp.float32), y.astype(jnp.float32), z.astype(jnp.float32),
+            0.25, -1.5,
+        )
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+        )
+
+
+class TestBackendEquivalence:
+    """fw_solve(backend='pallas') == fw_solve(backend='xla') end to end.
+
+    small_problem has p=300: NOT divisible by block_size=128, so the
+    padded-kernel path is what's exercised.
+    """
+
+    @pytest.mark.parametrize(
+        "sampling,kw",
+        [
+            ("uniform", dict(kappa=60)),
+            ("block", dict(kappa=64, block_size=32)),
+            ("full", dict(block_size=128)),
+        ],
+    )
+    def test_objective_parity(self, small_problem, rng_key, sampling, kw):
+        Xt, y, _ = small_problem
+        base = dict(delta=DELTA, sampling=sampling, max_iters=5000, tol=1e-6, **kw)
+        res_x = fw_solve(Xt, y, FWConfig(**base), rng_key)
+        res_p = fw_solve(Xt, y, FWConfig(backend="pallas", **base), rng_key)
+        rel = abs(float(res_p.objective) - float(res_x.objective)) / abs(
+            float(res_x.objective)
+        )
+        assert rel < 1e-4, (sampling, rel)
+        assert float(jnp.sum(jnp.abs(res_p.alpha))) <= DELTA * (1 + 1e-5)
+
+    def test_uniform_sampling_identical_trajectory(self, small_problem, rng_key):
+        """Width-1 blocks replay the exact same index stream as the XLA
+        gather, so uniform-sampling runs are bit-for-bit comparable."""
+        Xt, y, _ = small_problem
+        base = dict(delta=DELTA, sampling="uniform", kappa=60, max_iters=2000, tol=1e-6)
+        res_x = fw_solve(Xt, y, FWConfig(**base), rng_key)
+        res_p = fw_solve(Xt, y, FWConfig(backend="pallas", **base), rng_key)
+        assert int(res_x.iterations) == int(res_p.iterations)
+        assert int(res_x.n_dots) == int(res_p.n_dots)
+
+
+class TestBlockSamplingClamp:
+    def test_more_blocks_requested_than_available(self, rng_key):
+        """kappa // block_size > ceil(p / block_size) used to crash
+        jax.random.choice(replace=False); the count is now clamped."""
+        p = 64
+        cfg = FWConfig(delta=10.0, sampling="block", kappa=128, block_size=32)
+        idx = _sample_indices(rng_key, p, cfg)
+        assert idx.shape == (64,)  # clamped to ceil(64/32)=2 blocks
+        assert int(idx.min()) >= 0 and int(idx.max()) < p
+        assert len(set(np.asarray(idx).tolist())) == p  # all blocks, no dupes
+
+    def test_tail_wrap_stays_in_range(self, rng_key):
+        p = 300
+        cfg = FWConfig(delta=10.0, sampling="block", kappa=256, block_size=128)
+        for s in range(5):
+            idx = _sample_indices(jax.random.PRNGKey(s), p, cfg)
+            assert int(idx.max()) < p and int(idx.min()) >= 0
+
+    def test_oversampled_block_solve_runs(self, rng_key):
+        rng = np.random.default_rng(0)
+        Xt = jnp.asarray(rng.standard_normal((64, 40)).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal(40).astype(np.float32))
+        cfg = FWConfig(delta=5.0, sampling="block", kappa=128, block_size=32,
+                       max_iters=500, tol=1e-5)
+        res = fw_solve(Xt, y, cfg, rng_key)
+        assert bool(jnp.isfinite(res.objective))
+
+
+class TestBatchedPath:
+    def test_matches_sequential_and_compiles_once(self, small_problem):
+        Xt, y, _ = small_problem
+        deltas = path_lib.delta_grid(100.0, n_points=20)
+        cfg = FWConfig(delta=1.0, kappa=60, max_iters=20000, tol=1e-4)
+        seq = path_lib.fw_path(Xt, y, deltas, cfg)
+        path_lib.clear_batched_solver_cache()
+        bat = path_lib.fw_path_batched(Xt, y, deltas, cfg)
+        assert path_lib.batched_solver_cache_size() == 1  # ONE compile, 3 chunks
+        assert len(bat.points) == len(seq.points) == 20
+        for s, b in zip(seq.points, bat.points):
+            assert b.reg == pytest.approx(s.reg, rel=1e-12)
+            rel = abs(b.objective - s.objective) / abs(s.objective)
+            assert rel < 1e-3, (s.reg, rel)
+            assert b.l1 <= s.reg * (1 + 1e-4)
+
+    def test_lane_width_one_degenerates_to_sequential(self, small_problem):
+        Xt, y, _ = small_problem
+        deltas = path_lib.delta_grid(50.0, n_points=3)
+        cfg = FWConfig(delta=1.0, kappa=60, max_iters=3000, tol=1e-4)
+        res = path_lib.fw_path_batched(Xt, y, deltas, cfg, lane_width=1)
+        assert len(res.points) == 3
+        objs = [pt.objective for pt in res.points]
+        assert objs[-1] <= objs[0] * (1 + 1e-6)
+
+    def test_ragged_final_chunk_padding(self, small_problem):
+        """n_points not divisible by lane_width: padded lanes are dropped."""
+        Xt, y, _ = small_problem
+        deltas = path_lib.delta_grid(50.0, n_points=7)
+        cfg = FWConfig(delta=1.0, kappa=60, max_iters=3000, tol=1e-4)
+        res = path_lib.fw_path_batched(Xt, y, deltas, cfg, lane_width=3)
+        assert len(res.points) == 7
+        assert [pt.reg for pt in res.points] == pytest.approx(list(deltas))

@@ -131,9 +131,14 @@ class TestElasticRemesh:
             save_checkpoint(r"{tmp_path}", 3, {{"params": {{"w": w}}}})
         """)
         env = {"PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src"),
-               "PATH": "/usr/bin:/bin"}
+               "PATH": "/usr/bin:/bin",
+               # stripped env: pin the backend or PJRT plugin discovery can hang
+               "JAX_PLATFORMS": "cpu"}
+        import os
+        # slow shared CI runners need headroom (overridden in ci.yml)
+        limit = int(os.environ.get("REPRO_SUBPROC_TIMEOUT", "300"))
         proc = subprocess.run([sys.executable, "-c", script],
-                              capture_output=True, text=True, timeout=300, env=env)
+                              capture_output=True, text=True, timeout=limit, env=env)
         assert proc.returncode == 0, proc.stderr[-2000:]
         # restore in THIS single-device process
         step, state = load_latest(tmp_path, {"params": {"w": jnp.zeros((8, 8))}})

@@ -43,11 +43,15 @@ SCRIPT = textwrap.dedent("""
 
 @pytest.fixture(scope="module")
 def dist_result():
+    import os
+    limit = max(600, int(os.environ.get("REPRO_SUBPROC_TIMEOUT", "0")))
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],
-        capture_output=True, text=True, timeout=600,
+        capture_output=True, text=True, timeout=limit,
         env={"PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src"),
-             "PATH": "/usr/bin:/bin"},
+             "PATH": "/usr/bin:/bin",
+               # stripped env: pin the backend or PJRT plugin discovery can hang
+               "JAX_PLATFORMS": "cpu"},
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]

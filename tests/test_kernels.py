@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # skips @given tests when hypothesis is missing
 
 from repro.kernels import colstats, fw_vertex, residual_update, sampled_scores
 from repro.kernels.colstats.ref import colstats_ref

@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # skips @given tests when hypothesis is missing
 
 from repro.configs import get_config
 from repro.models import attention as A

@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st  # skips @given tests when hypothesis is missing
 
 from repro.core import FWConfig, fw_solve
 from repro.core.fw_lasso import _sample_indices
