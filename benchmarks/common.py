@@ -8,7 +8,9 @@ All emitted rows carry the actual (m, p) used.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import platform
 import time
 from typing import Callable, Dict, List, Tuple
 
@@ -18,7 +20,7 @@ import numpy as np
 
 from repro.core import CDConfig, FISTAConfig, FWConfig, baselines, fw_solve, path as path_lib
 from repro.core.sampling import kappa_fraction
-from repro.data import make_proxy, standardize
+from repro.data import make_proxy, make_sparse_proxy, standardize
 from repro.data.synthetic import paper_synthetic
 
 SCALE = os.environ.get("REPRO_BENCH_SCALE", "ci")
@@ -55,6 +57,17 @@ def load_dataset(name: str):
     return Xt, y, ds
 
 
+# text datasets only: name -> (scale_ci, scale_paper), matching DATASETS
+SPARSE_DATASETS = {"e2006-tfidf": (0.02, 0.15), "e2006-log1p": (0.005, 0.05)}
+
+
+def load_sparse_dataset(name: str):
+    """Sparse-native proxy (block-ELL matrix, no densification)."""
+    scale_ci, scale_paper = SPARSE_DATASETS[name]
+    ds = make_sparse_proxy(name, scale=scale_ci if SCALE == "ci" else scale_paper, seed=0)
+    return ds.mat, jnp.asarray(ds.y), ds
+
+
 def path_grids(Xt, y, n_points: int):
     """The paper's protocol: lambda grid from ||X^T y||_inf; delta grid from
     a high-precision CD solve at lambda_min (same sparsity budget)."""
@@ -76,3 +89,31 @@ class CSV:
         row = f"{name},{us_per_call:.1f},{derived}"
         self.rows.append(row)
         print(row, flush=True)
+
+
+class BenchJSON:
+    """Machine-readable benchmark sink: one BENCH_*.json per section so the
+    perf trajectory (per-backend wall-clock, shapes, iteration counts) is
+    diffable across PRs. Output dir: $REPRO_BENCH_JSON_DIR (default cwd).
+    """
+
+    def __init__(self, filename: str):
+        out_dir = os.environ.get("REPRO_BENCH_JSON_DIR", ".")
+        self.path = os.path.join(out_dir, filename)
+        self.records: List[dict] = []
+
+    def add(self, name: str, **fields):
+        self.records.append({"name": name, **fields})
+
+    def write(self):
+        payload = {
+            "scale": SCALE,
+            "jax_backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "records": self.records,
+        }
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "wt") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {self.path} ({len(self.records)} records)", flush=True)
+        return self.path

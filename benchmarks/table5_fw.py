@@ -3,19 +3,31 @@ time, speedup vs CD, iterations, dot products, mean active features.
 
 Both path drivers are timed per sampling fraction: the sequential
 ``fw_path`` and the batched-lane ``fw_path_batched`` (DESIGN.md §Path),
-with the batched row recording its speedup over sequential."""
+with the batched row recording its speedup over sequential. The sparse
+section runs the SAME path protocol with ``backend='sparse'`` on the
+sparse-native text-dataset proxy vs the dense XLA backend on its
+densified equivalent (feasible at bench scale only — which is the point).
+
+All rows are mirrored into BENCH_table5.json (BenchJSON).
+"""
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import CSV, CI_DATASETS, SCALE, load_dataset, path_grids
+import numpy as np
+
+from benchmarks.common import (
+    CSV, CI_DATASETS, SCALE, BenchJSON, load_dataset, load_sparse_dataset, path_grids,
+)
 from repro.core import CDConfig, FWConfig, path as path_lib
 from repro.core.sampling import kappa_fraction
 
 N_POINTS = 20 if SCALE == "ci" else 100
+SPARSE_BENCH_DATASET = "e2006-tfidf"
 
 
 def run(csv: CSV, datasets=None):
+    js = BenchJSON("BENCH_table5.json")
     datasets = datasets or CI_DATASETS
     for name in datasets:
         Xt, y, ds = load_dataset(name)
@@ -30,6 +42,9 @@ def run(csv: CSV, datasets=None):
             f"table5/{name}/cd_ref", cd_time * 1e6 / N_POINTS,
             f"m={m};p={p};dots={cd_res.total_dots};mean_active={cd_res.mean_active:.1f}",
         )
+        js.add(f"table5/{name}/cd_ref", m=m, p=p, n_points=N_POINTS,
+               seconds=cd_time, dots=cd_res.total_dots,
+               mean_active=cd_res.mean_active)
 
         for frac in (0.01, 0.02, 0.03):
             kappa = kappa_fraction(p, frac)
@@ -48,6 +63,10 @@ def run(csv: CSV, datasets=None):
                 f"mean_active={res.mean_active:.1f};"
                 f"dots_vs_cd={cd_res.total_dots / max(res.total_dots,1):.1f}x",
             )
+            js.add(f"table5/{name}/fw_{int(frac*100)}pct", m=m, p=p, kappa=kappa,
+                   n_points=N_POINTS, seconds=dt, iters=res.total_iters,
+                   dots=res.total_dots, mean_active=res.mean_active,
+                   speedup_vs_cd=cd_time / dt)
 
             lane_width = max(1, -(-N_POINTS // 8))
             t0 = time.perf_counter()
@@ -62,6 +81,60 @@ def run(csv: CSV, datasets=None):
                 f"iters={res_b.total_iters};dots={res_b.total_dots};"
                 f"mean_active={res_b.mean_active:.1f}",
             )
+            js.add(f"table5/{name}/fw_{int(frac*100)}pct_batched", m=m, p=p,
+                   kappa=kappa, lane_width=lane_width, n_points=N_POINTS,
+                   seconds=dt_b, iters=res_b.total_iters, dots=res_b.total_dots,
+                   mean_active=res_b.mean_active, speedup_vs_seq=dt / dt_b,
+                   speedup_vs_cd=cd_time / dt_b)
+
+    _run_sparse_section(csv, js)
+    js.write()
+
+
+def _run_sparse_section(csv: CSV, js: BenchJSON):
+    """backend='sparse' vs dense XLA on the same text-dataset proxy."""
+    mat, y, ds = load_sparse_dataset(SPARSE_BENCH_DATASET)
+    p, m = mat.shape
+    Xt_dense = mat.to_dense()  # feasible at bench scale; the real sizes are not
+    deltas = path_lib.delta_grid(
+        0.5 * float(np.abs(np.asarray(ds.coef)).sum()), n_points=N_POINTS
+    )
+    kappa = kappa_fraction(p, 0.01)
+    times = {}
+    results = {}
+    for backend, A in (("xla", Xt_dense), ("sparse", mat)):
+        cfg = FWConfig(
+            delta=1.0, kappa=kappa, sampling="uniform",
+            max_iters=20_000, tol=1e-3, backend=backend,
+        )
+        t0 = time.perf_counter()
+        res = path_lib.fw_path(A, y, deltas, cfg)
+        times[backend] = time.perf_counter() - t0
+        results[backend] = res
+        csv.emit(
+            f"table5/{SPARSE_BENCH_DATASET}-sparse/fw_1pct_{backend}",
+            times[backend] * 1e6 / N_POINTS,
+            f"m={m};p={p};kappa={kappa};nnz_max={mat.nnz_max};"
+            f"iters={res.total_iters};dots={res.total_dots};"
+            f"mean_active={res.mean_active:.1f}",
+        )
+        js.add(f"table5/{SPARSE_BENCH_DATASET}-sparse/fw_1pct_{backend}",
+               m=m, p=p, kappa=kappa, nnz_max=mat.nnz_max, backend=backend,
+               n_points=N_POINTS, seconds=times[backend],
+               iters=res.total_iters, dots=res.total_dots,
+               mean_active=res.mean_active)
+    obj_rel = abs(
+        results["sparse"].points[-1].objective - results["xla"].points[-1].objective
+    ) / max(abs(results["xla"].points[-1].objective), 1e-12)
+    csv.emit(
+        f"table5/{SPARSE_BENCH_DATASET}-sparse/speedup",
+        times["xla"] / times["sparse"] * 100,
+        f"sparse_vs_dense={times['xla']/times['sparse']:.1f}x;"
+        f"final_obj_rel_diff={obj_rel:.2e}",
+    )
+    js.add(f"table5/{SPARSE_BENCH_DATASET}-sparse/speedup",
+           sparse_vs_dense=times["xla"] / times["sparse"],
+           final_obj_rel_diff=obj_rel)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,19 @@
 """The paper's headline experiment (abstract): the COMPLETE regularization
 path on a problem with millions of variables in about a minute.
 
-E2006-log1p-like proxy at full feature count (p = 4,272,227) with a
-reduced sample count (m) so the dense matrix fits RAM; the per-iteration
-cost of stochastic FW is O(kappa * m), so the scaling story is faithful.
+E2006-log1p-like proxy at full feature count (p = 4,272,227). Two builds:
+
+* dense — reduced sample count (m) so the (m, p) matrix fits RAM; the
+  per-iteration cost of stochastic FW is O(kappa * m), so the scaling
+  story is faithful.
+* ``--backend sparse`` — the block-ELL sparse build (DESIGN.md §Sparse)
+  at the dataset's TRUE column density: storage is O(nnz), so the
+  paper-size problem needs ~100s of MB instead of ~18 GB and the
+  per-iteration cost drops to O(kappa * nnz_max).
 
     PYTHONPATH=src python examples/lasso_fullpath_4m.py            # p=1M default
     PYTHONPATH=src python examples/lasso_fullpath_4m.py --paper-size  # p=4.27M (needs ~18GB RAM)
+    PYTHONPATH=src python examples/lasso_fullpath_4m.py --paper-size --backend sparse  # fits anywhere
 """
 import argparse
 import time
@@ -17,7 +24,9 @@ import numpy as np
 
 from repro.core import FWConfig, path as path_lib
 from repro.core.sampling import kappa_fraction
+from repro.data.proxies import make_sparse_coo
 from repro.data.synthetic import Dataset, standardize
+from repro.sparse import SparseBlockMatrix
 
 
 def make_wide_problem(p: int, m: int, n_rel: int, seed: int = 0) -> Dataset:
@@ -44,18 +53,34 @@ def main():
     ap.add_argument("--frac", type=float, default=0.01, help="|S| as fraction of p")
     ap.add_argument("--driver", choices=("sequential", "batched"), default="batched",
                     help="fw_path (one delta at a time) or fw_path_batched lanes")
-    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
-                    help="iteration engine; 'pallas' uses the fused TPU kernels")
+    ap.add_argument("--backend", choices=("xla", "pallas", "sparse"), default="xla",
+                    help="iteration engine; 'pallas' uses the fused TPU kernels, "
+                         "'sparse' the block-ELL subsystem (no dense build)")
+    ap.add_argument("--density", type=float, default=0.002,
+                    help="column density for --backend sparse (E2006-log1p: 0.002)")
     args = ap.parse_args()
     p = 4_272_227 if args.paper_size else args.p
 
-    print(f"== generating wide problem p={p:,} m={args.m} "
-          f"({p * args.m * 4 / 1e9:.1f} GB design matrix)")
     t0 = time.perf_counter()
-    ds = make_wide_problem(p, args.m, n_rel=300)
-    Xt = jnp.asarray(np.ascontiguousarray(ds.X.T))
-    y = jnp.asarray(ds.y)
-    print(f"   built in {time.perf_counter()-t0:.1f}s")
+    if args.backend == "sparse":
+        print(f"== generating SPARSE wide problem p={p:,} m={args.m} "
+              f"density={args.density:g} (dense would be "
+              f"{p * args.m * 4 / 1e9:.1f} GB)")
+        rows, cols, vals, y_np, coef = make_sparse_coo(
+            args.m, p, args.density, n_relevant=300, seed=0
+        )
+        Xt = SparseBlockMatrix.from_coo(rows, cols, vals, (args.m, p), block_size=256)
+        y = jnp.asarray(y_np)
+        print(f"   built in {time.perf_counter()-t0:.1f}s "
+              f"({Xt.nbytes / 1e9:.2f} GB block-ELL, nnz_max={Xt.nnz_max})")
+    else:
+        print(f"== generating wide problem p={p:,} m={args.m} "
+              f"({p * args.m * 4 / 1e9:.1f} GB design matrix)")
+        ds = make_wide_problem(p, args.m, n_rel=300)
+        Xt = jnp.asarray(np.ascontiguousarray(ds.X.T))
+        y = jnp.asarray(ds.y)
+        coef = ds.coef
+        print(f"   built in {time.perf_counter()-t0:.1f}s")
 
     kappa = kappa_fraction(p, args.frac)
     # delta_max: the generator's true coefficients give an oracle l1 budget.
@@ -63,7 +88,7 @@ def main():
     # use case); the loose/dense end is FW's known slow regime (EXPERIMENTS
     # §Perf). A CD reference solve (the paper's protocol) is exercised at
     # smaller scale in benchmarks/ — too expensive at p~10^6 for a demo.
-    delta_max = 0.5 * float(np.abs(ds.coef).sum())
+    delta_max = 0.5 * float(np.abs(coef).sum())
     deltas = path_lib.delta_grid(delta_max, n_points=args.points)
     # pallas wants aligned blocks (uniform degrades to width-1 bricks that
     # leave the MXU idle — DESIGN.md §4.5); block sampling preserves Lemma 1

@@ -29,9 +29,12 @@ Implementation notes (beyond the paper, recorded in DESIGN.md):
     duality gap sits below the fp32 noise floor of its own terms also
     counts as a stall (``gap_rtol``, DESIGN.md §Stopping) so warm starts
     from a converged iterate terminate immediately;
-  * ``cfg.backend`` selects the iteration engine: 'xla' (jnp gathers) or
+  * ``cfg.backend`` selects the iteration engine: 'xla' (jnp gathers),
     'pallas' (the fused TPU kernels under repro.kernels; interpret mode
-    off-TPU), with zero-padded feature tails for non-divisible shapes.
+    off-TPU), with zero-padded feature tails for non-divisible shapes, or
+    'sparse' (``Xt`` is a repro.sparse.SparseBlockMatrix; the sampled
+    gradient, residual update, and colstats all run over the block-ELL
+    slots — O(kappa * nnz_max) per step instead of O(kappa * m)).
 """
 from __future__ import annotations
 
@@ -48,6 +51,8 @@ from repro.kernels.padding import pad_rows as _pad_features
 from repro.kernels.residual_update.residual_update import (
     residual_update as _residual_update_kernel,
 )
+from repro.sparse import ops as sparse_ops
+from repro.sparse.matrix import SparseBlockMatrix
 
 
 def _use_interpret(cfg: FWConfig) -> bool:
@@ -55,6 +60,30 @@ def _use_interpret(cfg: FWConfig) -> bool:
     if cfg.interpret is not None:
         return cfg.interpret
     return jax.default_backend() != "tpu"
+
+
+def _use_sparse_kernel(cfg: FWConfig) -> bool:
+    """'sparse' backend: Pallas prefetch kernel on TPU, XLA gather elsewhere
+    (the XLA path is the production CPU path, not a test stub)."""
+    if cfg.sparse_kernel is not None:
+        return cfg.sparse_kernel
+    return jax.default_backend() == "tpu"
+
+
+def _check_matrix_backend(Xt, cfg: FWConfig) -> None:
+    """Trace-time guard: the matrix layout and the backend must agree."""
+    is_sparse = isinstance(Xt, SparseBlockMatrix)
+    if is_sparse and cfg.backend != "sparse":
+        raise ValueError(
+            f"Xt is a SparseBlockMatrix but cfg.backend={cfg.backend!r}; "
+            "use FWConfig(backend='sparse')"
+        )
+    if cfg.backend == "sparse" and not is_sparse:
+        raise ValueError(
+            "cfg.backend='sparse' needs a repro.sparse.SparseBlockMatrix "
+            "design matrix (build one with SparseBlockMatrix.from_dense / "
+            "from_coo or repro.data.make_sparse_proxy)"
+        )
 
 
 class ColStats(NamedTuple):
@@ -97,7 +126,11 @@ def precompute_colstats(
 
     With ``cfg.backend == 'pallas'`` the fused single-sweep kernel
     (repro.kernels.colstats) computes both statistics in one HBM pass.
+    A SparseBlockMatrix sweeps its stored slots only — O(nnz), not O(p*m).
     """
+    if isinstance(Xt, SparseBlockMatrix):
+        zty, znorm2 = sparse_ops.sparse_colstats(Xt, y)
+        return ColStats(zty=zty, znorm2=znorm2, yty=jnp.dot(y, y))
     if cfg is not None and cfg.backend == "pallas":
         zty, znorm2 = _colstats_kernel(
             Xt, y, m_tile=cfg.m_tile, interpret=_use_interpret(cfg)
@@ -124,7 +157,10 @@ def init_state(
         maxabs = jnp.zeros((), Xt.dtype)
     else:
         beta = alpha0.astype(Xt.dtype)
-        v = beta @ Xt  # X alpha
+        if isinstance(Xt, SparseBlockMatrix):
+            v = sparse_ops.sparse_matvec(Xt, beta)  # X alpha, O(nnz)
+        else:
+            v = beta @ Xt  # X alpha
         resid = y - v
         s_quad = jnp.dot(v, v)
         f_lin = jnp.dot(v, y)
@@ -212,6 +248,49 @@ def _kernel_vertex(
     return i_star, g_star, n_scored
 
 
+def _sample_sparse_blocks(key: jax.Array, mat: SparseBlockMatrix, cfg: FWConfig):
+    """Aligned block starts for the sparse backend. Block geometry comes
+    from the MATRIX (cfg.block_size is a dense-kernel knob); the requested
+    count is clamped to the available blocks like _sample_block_starts."""
+    nblocks = min(max(cfg.kappa // mat.block_size, 1), mat.nblocks)
+    return jax.random.choice(key, mat.nblocks, (nblocks,), replace=False).astype(
+        jnp.int32
+    )
+
+
+def _sparse_vertex(
+    mat: SparseBlockMatrix, resid: jax.Array, key: jax.Array, cfg: FWConfig
+):
+    """Sampled FW vertex over the block-ELL matrix.
+
+    'block'/'full' drive whole aligned blocks (kernel-dispatchable, the
+    tail block is zero-padded at construction — no modulo wrap, so exact
+    Lemma 1 uniformity holds for every p); 'uniform' is a width-1 XLA
+    gather replaying the exact index stream of the dense XLA path.
+    Returns (i_star, g_star, n_scored).
+    """
+    if cfg.sampling == "uniform":
+        idx = _sample_indices(key, mat.p, cfg)
+        i_star, g_star = sparse_ops.sparse_gather_vertex(mat, resid, idx)
+        return i_star, g_star, idx.shape[0]
+    if cfg.sampling == "block":
+        blk = _sample_sparse_blocks(key, mat, cfg)
+        n_scored = blk.shape[0] * mat.block_size
+    elif cfg.sampling == "full":
+        blk = jnp.arange(mat.nblocks, dtype=jnp.int32)
+        n_scored = mat.p
+    else:
+        raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
+    i_star, g_star = sparse_ops.sparse_fw_vertex(
+        mat,
+        resid,
+        blk,
+        use_kernel=_use_sparse_kernel(cfg),
+        interpret=_use_interpret(cfg),
+    )
+    return i_star, g_star, n_scored
+
+
 def fw_step(
     Xt: jax.Array,
     y: jax.Array,
@@ -235,7 +314,9 @@ def fw_step(
     key, sub = jax.random.split(state.key)
 
     # -- step 2: method of residuals on the sampled coordinates (eq. 7) ----
-    if cfg.backend == "pallas":
+    if cfg.backend == "sparse":
+        i_star, g_star, n_scored = _sparse_vertex(Xt, state.resid, sub, cfg)
+    elif cfg.backend == "pallas":
         i_star, g_star, n_scored = _kernel_vertex(Xt, state.resid, sub, p, cfg)
     else:
         idx = _sample_indices(sub, p, cfg)
@@ -271,13 +352,19 @@ def fw_step(
     beta = beta.at[i_star].add(delta_t * lam / jnp.maximum(scale, cfg.eps_den))
 
     # -- step 6: residual update (eq. 10) -----------------------------------
-    z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
-    if cfg.backend == "pallas":
+    if cfg.backend == "sparse":
+        col_vals, col_rows = sparse_ops.sparse_column(Xt, i_star)
+        resid = sparse_ops.sparse_residual_update(
+            state.resid, y, col_vals, col_rows, lam, delta_t
+        )
+    elif cfg.backend == "pallas":
+        z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
         resid = _residual_update_kernel(
             state.resid, y, z_star, lam, delta_t,
             m_tile=cfg.m_tile, interpret=_use_interpret(cfg),
         )
     else:
+        z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
         resid = one_m * state.resid + lam * (y - delta_t * z_star)
 
     # -- S/F scalar recursions (paper, below eq. 8) --------------------------
@@ -332,10 +419,13 @@ def objective(stats: ColStats, state: FWState) -> jax.Array:
 def duality_gap(Xt: jax.Array, state: FWState, delta: float) -> jax.Array:
     """Exact FW duality gap g(alpha) = alpha^T grad + delta*||grad||_inf.
 
-    O(m p) — used for certification / tests, not inside the hot loop.
+    O(m p) dense, O(nnz) sparse — certification / tests, not the hot loop.
     """
     alpha = state.scale * state.beta
-    grad = -(Xt @ state.resid)
+    if isinstance(Xt, SparseBlockMatrix):
+        grad = -sparse_ops.sparse_transpose_matvec(Xt, state.resid)
+    else:
+        grad = -(Xt @ state.resid)
     return jnp.dot(alpha, grad) + delta * jnp.max(jnp.abs(grad))
 
 
@@ -355,6 +445,7 @@ def fw_solve(
     """Run Algorithm 2 until ||alpha_{k+1}-alpha_k||_inf <= tol for
     ``patience`` consecutive iterations, or max_iters. ``delta`` (traced)
     overrides cfg.delta — one compile serves the whole path."""
+    _check_matrix_backend(Xt, cfg)
     delta = jnp.asarray(cfg.delta if delta is None else delta)
     stats = precompute_colstats(Xt, y, cfg)
     state0 = init_state(Xt, y, key, alpha0)
@@ -393,6 +484,7 @@ def fw_solve_with_history(
 
     Returns (result, objective_history[n_iters]).
     """
+    _check_matrix_backend(Xt, cfg)
     stats = precompute_colstats(Xt, y, cfg)
     state0 = init_state(Xt, y, key, alpha0)
     if cfg.backend == "pallas" and cfg.sampling != "uniform":

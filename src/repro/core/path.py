@@ -26,6 +26,8 @@ import numpy as np
 
 from repro.core import baselines, fw_lasso
 from repro.core.solver_config import CDConfig, FISTAConfig, FWConfig
+from repro.sparse import ops as sparse_ops
+from repro.sparse.matrix import SparseBlockMatrix
 
 
 class PathPoint(NamedTuple):
@@ -51,9 +53,17 @@ class PathResult(NamedTuple):
         return float(np.mean([pt.active for pt in self.points]))
 
 
+def _xty(Xt, y):
+    """X^T y for either matrix layout (both path drivers accept a dense
+    feature-major array OR a SparseBlockMatrix)."""
+    if isinstance(Xt, SparseBlockMatrix):
+        return sparse_ops.sparse_transpose_matvec(Xt, y)
+    return Xt @ y
+
+
 def lambda_grid(Xt, y, n_points: int = 100, ratio: float = 100.0) -> np.ndarray:
     """Glmnet-style grid: lam_max = ||X^T y||_inf, descending log scale."""
-    lam_max = float(jnp.max(jnp.abs(Xt @ y)))
+    lam_max = float(jnp.max(jnp.abs(_xty(Xt, y))))
     lam_min = lam_max / ratio
     return np.geomspace(lam_max, lam_min, n_points)
 

@@ -36,7 +36,17 @@ def kappa_fraction(p: int, fraction: float) -> int:
     return max(1, int(math.ceil(fraction * p)))
 
 
-def kappa_blocks(kappa: int, block_size: int) -> int:
-    """Round a target kappa up to a whole number of aligned blocks."""
+def kappa_blocks(kappa: int, block_size: int, p: int | None = None) -> int:
+    """Round a target kappa up to a whole number of aligned blocks.
+
+    When ``p`` is given the count is clamped to the ceil(p / block_size)
+    blocks that actually exist — the same clamp the solver applies before
+    choice-without-replacement (`fw_lasso._sample_block_starts`), so a
+    kappa request larger than p can never imply more blocks than exist.
+    """
     nblocks = max(1, math.ceil(kappa / block_size))
+    if p is not None:
+        if p <= 0:
+            raise ValueError("p must be positive")
+        nblocks = min(nblocks, math.ceil(p / block_size))
     return nblocks * block_size

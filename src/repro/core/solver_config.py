@@ -19,8 +19,15 @@ class FWConfig:
       gap_rtol: a step whose sampled duality gap (the line-search numerator,
         DESIGN.md §Stopping) is below gap_rtol * the gap's own fp32 scale is
         counted as a stall — it is indistinguishable from rounding noise.
-      backend: 'xla' (plain jnp gathers) or 'pallas' (the fused kernels in
-        repro.kernels drive the hot loop; interpret mode off-TPU).
+      backend: 'xla' (plain jnp gathers), 'pallas' (the fused kernels in
+        repro.kernels drive the hot loop; interpret mode off-TPU), or
+        'sparse' (block-ELL SparseBlockMatrix design matrix — the solver
+        expects ``Xt`` to be a repro.sparse.SparseBlockMatrix and the
+        three O(kappa*m) primitives drop to O(kappa*nnz_max); block
+        geometry comes from the MATRIX, so ``block_size`` is ignored).
+      sparse_kernel: 'sparse' backend only — None = auto (Pallas
+        kernels/sparse_grad on TPU, pure-XLA gather elsewhere), True/False
+        forces the choice (tests force True + interpret).
       m_tile: sample-dimension tile for the Pallas kernels.
       interpret: force Pallas interpret mode; None = auto (interpret
         everywhere except on real TPU devices).
@@ -38,6 +45,7 @@ class FWConfig:
     renorm_threshold: float = 1e-6
     gap_rtol: float = 1e-6
     backend: str = "xla"
+    sparse_kernel: Optional[bool] = None
     m_tile: int = 512
     interpret: Optional[bool] = None
 

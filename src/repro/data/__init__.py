@@ -1,4 +1,18 @@
 from repro.data.synthetic import make_regression, standardize
-from repro.data.proxies import make_proxy, PROXY_SPECS
+from repro.data.proxies import (
+    PROXY_SPECS,
+    SparseDataset,
+    dense_proxy_bytes,
+    make_proxy,
+    make_sparse_proxy,
+)
 
-__all__ = ["make_regression", "standardize", "make_proxy", "PROXY_SPECS"]
+__all__ = [
+    "make_regression",
+    "standardize",
+    "make_proxy",
+    "make_sparse_proxy",
+    "dense_proxy_bytes",
+    "SparseDataset",
+    "PROXY_SPECS",
+]

@@ -4,10 +4,18 @@ mode on CPU; enabled on real TPUs via FWConfig/solver flags).
 fw_grad:          sampled column-block scores (scalar-prefetch gather)
 residual_update:  fused R <- (1-lam) R + lam (y - dt z)
 colstats:         fused z^T y and ||z||^2 setup pass
+sparse_grad:      sampled block-ELL scores (sparse twin of fw_grad)
 """
 from repro.kernels.fw_grad.ops import fw_vertex
 from repro.kernels.fw_grad.fw_grad import sampled_scores
 from repro.kernels.residual_update.residual_update import residual_update
 from repro.kernels.colstats.colstats import colstats
+from repro.kernels.sparse_grad.sparse_grad import sparse_sampled_scores
 
-__all__ = ["fw_vertex", "sampled_scores", "residual_update", "colstats"]
+__all__ = [
+    "fw_vertex",
+    "sampled_scores",
+    "residual_update",
+    "colstats",
+    "sparse_sampled_scores",
+]

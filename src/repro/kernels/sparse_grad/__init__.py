@@ -1,0 +1,4 @@
+from repro.kernels.sparse_grad.sparse_grad import sparse_sampled_scores
+from repro.kernels.sparse_grad.ref import sparse_sampled_scores_ref
+
+__all__ = ["sparse_sampled_scores", "sparse_sampled_scores_ref"]

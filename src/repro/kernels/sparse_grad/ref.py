@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the sparse sampled block-gradient kernel.
+
+Given the block-ELL arrays of a SparseBlockMatrix, residual r (m,), and
+sampled block indices blk (nb,): gather the referenced residual entries
+and segment-dot,
+
+    scores[i*bs + t] = - sum_k values[blk[i], t, k] * r[rows[blk[i], t, k]]
+
+This is also the XLA fallback the solver runs off-TPU (the Pallas kernel
+targets the scalar-prefetch DMA path; interpret mode is for validation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparse_sampled_scores_ref(values, rows, r, blk):
+    vals = jnp.take(values, blk, axis=0).astype(jnp.float32)  # (nb, bs, k)
+    idx = jnp.take(rows, blk, axis=0)  # (nb, bs, k)
+    gathered = jnp.take(r.astype(jnp.float32), idx, axis=0)
+    scores = -jnp.sum(vals * gathered, axis=2)  # (nb, bs)
+    return scores.reshape(-1)

@@ -1,0 +1,33 @@
+"""Sparse column-block subsystem (DESIGN.md §Sparse).
+
+matrix — block-ELL/padded-CSC SparseBlockMatrix storage + converters
+io     — svmlight text reader/writer, .npz shard streaming
+ops    — solver-facing primitives (scores/colstats/residual/matvec)
+"""
+from repro.sparse.matrix import SparseBlockMatrix
+from repro.sparse.io import (
+    COOData,
+    convert_svmlight_to_shards,
+    iter_shards,
+    load_shards,
+    load_shards_as_matrix,
+    load_svmlight,
+    read_manifest,
+    save_svmlight,
+    write_shards,
+)
+from repro.sparse import ops
+
+__all__ = [
+    "SparseBlockMatrix",
+    "COOData",
+    "convert_svmlight_to_shards",
+    "iter_shards",
+    "load_shards",
+    "load_shards_as_matrix",
+    "load_svmlight",
+    "read_manifest",
+    "save_svmlight",
+    "write_shards",
+    "ops",
+]

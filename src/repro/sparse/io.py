@@ -1,0 +1,354 @@
+"""svmlight/libsvm text IO and .npz shard streaming (DESIGN.md §Sparse).
+
+Two interchange layers feed the sparse subsystem:
+
+* ``load_svmlight`` / ``save_svmlight`` — the text format the paper's
+  real datasets (E2006-tfidf / E2006-log1p) ship in: one sample per line,
+  ``label idx:val idx:val ...`` with 1-based indices by convention.
+* ``write_shards`` / ``iter_shards`` / ``load_shards_as_matrix`` — a
+  row-range .npz shard layout plus a JSON manifest so multi-GB datasets
+  convert once and then load block-by-block out of core: the streaming
+  assembler makes two passes over the shards (per-feature nnz counts,
+  then ELL fill) and never materializes a dense array or even the full
+  COO triplet set.
+
+Everything here is numpy-only; device placement happens at
+SparseBlockMatrix construction.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterator, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.sparse.matrix import SparseBlockMatrix
+
+MANIFEST_NAME = "manifest.json"
+SHARD_FORMAT = "coo-npz-v1"
+
+
+class COOData(NamedTuple):
+    """COO triplets in (sample, feature) orientation plus targets."""
+
+    rows: np.ndarray  # (nnz,) sample indices
+    cols: np.ndarray  # (nnz,) feature indices
+    vals: np.ndarray  # (nnz,) float32
+    y: np.ndarray  # (m,) float32 labels/targets
+    shape: Tuple[int, int]  # (m, p)
+
+
+# --------------------------------------------------------------------------
+# svmlight / libsvm text format
+# --------------------------------------------------------------------------
+
+
+def load_svmlight(
+    path,
+    *,
+    n_features: Optional[int] = None,
+    zero_based: str | bool = "auto",
+    dtype=np.float32,
+) -> COOData:
+    """Parse an svmlight/libsvm text file into COO triplets.
+
+    ``zero_based='auto'`` treats the file as 0-based only when a 0 index
+    appears (the libsvm convention is 1-based). CAVEAT: a genuinely
+    0-based file whose feature 0 happens to have no nonzeros is
+    indistinguishable from a 1-based one — pass ``zero_based`` explicitly
+    whenever the writer's convention is known (e.g. round-tripping
+    ``save_svmlight(zero_based=True)``). ``qid:`` tokens and ``#``
+    comments are ignored. ``n_features`` widens p beyond the max seen
+    index (needed for consistent train/test shapes).
+
+    This reader holds the full COO set in memory; for files that do not
+    fit, ``convert_svmlight_to_shards`` streams straight to the .npz
+    shard layout with one shard of rows in memory at a time.
+    """
+    rows, cols, vals, y = [], [], [], []
+    with open(path, "rt") as fh:
+        for line in fh:
+            line = line.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split()
+            y.append(float(parts[0]))
+            r = len(y) - 1
+            for tok in parts[1:]:
+                if tok.startswith("qid:"):
+                    continue
+                i, v = tok.split(":")
+                rows.append(r)
+                cols.append(int(i))
+                vals.append(float(v))
+    rows_a = np.asarray(rows, np.int64)
+    cols_a = np.asarray(cols, np.int64)
+    vals_a = np.asarray(vals, dtype)
+    if zero_based == "auto":
+        zero_based = bool(cols_a.size) and int(cols_a.min()) == 0
+    if not zero_based:
+        cols_a = cols_a - 1
+    if cols_a.size and cols_a.min() < 0:
+        raise ValueError("negative feature index after base adjustment")
+    p = int(cols_a.max()) + 1 if cols_a.size else 0
+    if n_features is not None:
+        if n_features < p:
+            raise ValueError(f"n_features={n_features} < max index + 1 = {p}")
+        p = n_features
+    return COOData(rows_a, cols_a, vals_a, np.asarray(y, np.float32), (len(y), p))
+
+
+def save_svmlight(path, data: COOData, *, zero_based: bool = False) -> None:
+    """Write COO triplets as svmlight text (1-based indices by default).
+
+    Entries are emitted sorted by (row, col) — the canonical layout every
+    libsvm tool expects.
+    """
+    m, _ = data.shape
+    order = np.lexsort((data.cols, data.rows))
+    rows, cols, vals = data.rows[order], data.cols[order], data.vals[order]
+    base = 0 if zero_based else 1
+    starts = np.searchsorted(rows, np.arange(m + 1))
+    with open(path, "wt") as fh:
+        for r in range(m):
+            feats = " ".join(
+                f"{int(c) + base}:{float(v):.9g}"
+                for c, v in zip(
+                    cols[starts[r] : starts[r + 1]], vals[starts[r] : starts[r + 1]]
+                )
+            )
+            fh.write(f"{float(data.y[r]):.9g} {feats}".rstrip() + "\n")
+
+
+# --------------------------------------------------------------------------
+# .npz row-range shards + manifest
+# --------------------------------------------------------------------------
+
+
+def write_shards(
+    out_dir,
+    data: COOData,
+    *,
+    rows_per_shard: int = 4096,
+) -> str:
+    """Split a COO dataset into row-range .npz shards + a JSON manifest.
+
+    Returns the manifest path. Shard k holds rows
+    [k*rows_per_shard, (k+1)*rows_per_shard) with LOCAL row indices and
+    its slice of y, so a consumer never needs more than one shard in
+    memory.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    m, p = data.shape
+    n_shards = max(1, -(-m // rows_per_shard))
+    order = np.argsort(data.rows, kind="stable")
+    rows, cols, vals = data.rows[order], data.cols[order], data.vals[order]
+    bounds = np.searchsorted(rows, np.arange(n_shards + 1) * rows_per_shard)
+    names = []
+    for k in range(n_shards):
+        lo_row = k * rows_per_shard
+        hi_row = min(m, lo_row + rows_per_shard)
+        sl = slice(bounds[k], bounds[k + 1])
+        name = f"shard_{k:05d}.npz"
+        np.savez(
+            os.path.join(out_dir, name),
+            rows=(rows[sl] - lo_row).astype(np.int32),
+            cols=cols[sl].astype(np.int64),
+            vals=vals[sl],
+            y=data.y[lo_row:hi_row],
+            row_offset=np.int64(lo_row),
+        )
+        names.append(name)
+    manifest = {
+        "format": SHARD_FORMAT,
+        "m": int(m),
+        "p": int(p),
+        "rows_per_shard": int(rows_per_shard),
+        "shards": names,
+    }
+    manifest_path = os.path.join(out_dir, MANIFEST_NAME)
+    with open(manifest_path, "wt") as fh:
+        json.dump(manifest, fh, indent=2)
+    return manifest_path
+
+
+def convert_svmlight_to_shards(
+    svm_path,
+    out_dir,
+    *,
+    rows_per_shard: int = 4096,
+    zero_based: bool = False,
+    n_features: Optional[int] = None,
+    dtype=np.float32,
+) -> str:
+    """Stream an svmlight text file straight into the shard layout.
+
+    Unlike ``load_svmlight`` + ``write_shards`` this never holds more
+    than one shard of rows in memory, so multi-GB source files convert on
+    shard-sized RAM. ``zero_based`` must be stated explicitly (default:
+    the libsvm 1-based convention) — auto-detection needs a full pass and
+    is exactly the ambiguity the streaming path avoids. Returns the
+    manifest path.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    base = 0 if zero_based else 1
+    names = []
+    max_col = -1
+    m = 0
+
+    rows_l: list = []
+    cols_l: list = []
+    vals_l: list = []
+    y_l: list = []
+
+    def _flush():
+        nonlocal rows_l, cols_l, vals_l, y_l
+        k = len(names)
+        name = f"shard_{k:05d}.npz"
+        np.savez(
+            os.path.join(out_dir, name),
+            rows=np.asarray(rows_l, np.int32),
+            cols=np.asarray(cols_l, np.int64),
+            vals=np.asarray(vals_l, dtype),
+            y=np.asarray(y_l, np.float32),
+            row_offset=np.int64(k * rows_per_shard),
+        )
+        names.append(name)
+        rows_l, cols_l, vals_l, y_l = [], [], [], []
+
+    with open(svm_path, "rt") as fh:
+        for line in fh:
+            line = line.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split()
+            y_l.append(float(parts[0]))
+            r_local = m % rows_per_shard
+            m += 1
+            for tok in parts[1:]:
+                if tok.startswith("qid:"):
+                    continue
+                i, v = tok.split(":")
+                c = int(i) - base
+                if c < 0:
+                    raise ValueError("negative feature index after base adjustment")
+                max_col = max(max_col, c)
+                rows_l.append(r_local)
+                cols_l.append(c)
+                vals_l.append(float(v))
+            if m % rows_per_shard == 0:
+                _flush()
+    if y_l or not names:
+        _flush()
+
+    p = max_col + 1
+    if n_features is not None:
+        if n_features < p:
+            raise ValueError(f"n_features={n_features} < max index + 1 = {p}")
+        p = n_features
+    manifest = {
+        "format": SHARD_FORMAT,
+        "m": int(m),
+        "p": int(p),
+        "rows_per_shard": int(rows_per_shard),
+        "shards": names,
+    }
+    manifest_path = os.path.join(out_dir, MANIFEST_NAME)
+    with open(manifest_path, "wt") as fh:
+        json.dump(manifest, fh, indent=2)
+    return manifest_path
+
+
+def read_manifest(shard_dir) -> dict:
+    with open(os.path.join(shard_dir, MANIFEST_NAME), "rt") as fh:
+        manifest = json.load(fh)
+    if manifest.get("format") != SHARD_FORMAT:
+        raise ValueError(f"unknown shard format {manifest.get('format')!r}")
+    return manifest
+
+
+def iter_shards(shard_dir) -> Iterator[Tuple[COOData, int]]:
+    """Stream (chunk, row_offset) pairs; chunk row ids are GLOBAL."""
+    manifest = read_manifest(shard_dir)
+    p = manifest["p"]
+    for name in manifest["shards"]:
+        with np.load(os.path.join(shard_dir, name)) as z:
+            off = int(z["row_offset"])
+            yield COOData(
+                z["rows"].astype(np.int64) + off,
+                z["cols"].astype(np.int64),
+                z["vals"],
+                z["y"],
+                (manifest["m"], p),
+            ), off
+
+
+def load_shards(shard_dir) -> COOData:
+    """Concatenate all shards back into one in-memory COO dataset."""
+    manifest = read_manifest(shard_dir)
+    chunks = [c for c, _ in iter_shards(shard_dir)]
+    return COOData(
+        np.concatenate([c.rows for c in chunks]),
+        np.concatenate([c.cols for c in chunks]),
+        np.concatenate([c.vals for c in chunks]),
+        np.concatenate([c.y for c in chunks]),
+        (manifest["m"], manifest["p"]),
+    )
+
+
+def load_shards_as_matrix(
+    shard_dir,
+    *,
+    block_size: int = 256,
+    nnz_max: Optional[int] = None,
+    dtype=np.float32,
+):
+    """Two-pass streaming assembly: shards -> SparseBlockMatrix + y.
+
+    Pass 1 accumulates per-feature nnz counts (sizes the ELL budget);
+    pass 2 fills the block-ELL arrays shard by shard. Peak extra memory
+    is one shard plus the output arrays — no full COO set, no dense X.
+    """
+    manifest = read_manifest(shard_dir)
+    m, p = manifest["m"], manifest["p"]
+    counts = np.zeros(p, np.int64)
+    for chunk, _ in iter_shards(shard_dir):
+        counts += np.bincount(chunk.cols, minlength=p)
+    required = int(counts.max()) if p else 0
+    if nnz_max is None:
+        nnz_max = max(1, required)
+    elif required > nnz_max:
+        raise ValueError(
+            f"nnz budget {nnz_max} too small: densest feature has {required} "
+            f"nonzeros (pass nnz_max>={required})"
+        )
+    nnz_max = max(1, int(nnz_max))
+
+    nblocks = -(-p // block_size)
+    pp = nblocks * block_size
+    values = np.zeros((pp, nnz_max), dtype)
+    rows = np.zeros((pp, nnz_max), np.int32)
+    y = np.zeros(m, np.float32)
+    cursor = np.zeros(p, np.int64)
+    for chunk, lo in iter_shards(shard_dir):
+        y[lo : lo + chunk.y.shape[0]] = chunk.y
+        order = np.argsort(chunk.cols, kind="stable")
+        cs = chunk.cols[order]
+        uniq, first, cnt = np.unique(cs, return_index=True, return_counts=True)
+        local = np.arange(cs.size) - np.repeat(first, cnt)
+        slot = cursor[cs] + local
+        values[cs, slot] = chunk.vals[order].astype(dtype)
+        rows[cs, slot] = chunk.rows[order].astype(np.int32)
+        cursor[uniq] += cnt
+    import jax.numpy as jnp
+
+    mat = SparseBlockMatrix(
+        values=jnp.asarray(values.reshape(nblocks, block_size, nnz_max)),
+        rows=jnp.asarray(rows.reshape(nblocks, block_size, nnz_max)),
+        p=p,
+        m=m,
+        block_size=block_size,
+        nnz_max=nnz_max,
+    )
+    return mat, y

@@ -1,0 +1,178 @@
+"""Block-ELL / padded-CSC storage for the feature-major design matrix.
+
+The randomized FW iteration only ever touches a sampled *feature block*
+per step (DESIGN.md §4.4), so the sparse format is organised around that
+access pattern: features (columns of X = rows of the feature-major Xt)
+are grouped into aligned blocks of ``block_size``, and every feature
+stores its nonzeros as a fixed-width (ELL) row of ``nnz_max`` slots,
+
+    values[b, t, k]  value of the k-th nonzero of feature b*block_size+t
+    rows[b, t, k]    sample index of that nonzero
+
+zero-padded past the feature's true nnz (padded slots carry value 0.0 at
+row 0, so gathers stay in bounds and scatter-adds are no-ops). The
+feature axis itself is zero-padded up to a whole number of blocks — the
+same convention as ``kernels/padding.pad_rows`` for the dense kernels
+(DESIGN.md §Padding): a padded feature's score is exactly 0 and the
+solver masks indices >= p out of the argmax.
+
+The rectangular (nblocks, block_size, nnz_max) layout is what makes the
+format JAX-friendly: a sampled block is ONE dynamic slice along the
+leading axis (scalar-prefetchable on TPU), and every op is a dense
+gather + reduction over a fixed shape — no ragged indexing inside jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SparseBlockMatrix:
+    """Feature-major sparse design matrix in block-ELL layout.
+
+    Logical shape is ``(p, m)`` — the same orientation as the dense ``Xt``
+    everywhere else in the repo — with ``p`` the TRUE feature count
+    (``values`` covers ``nblocks * block_size >= p`` padded features).
+    """
+
+    values: jax.Array  # (nblocks, block_size, nnz_max) float
+    rows: jax.Array  # (nblocks, block_size, nnz_max) int32 sample indices
+    p: int  # true feature count (un-padded)
+    m: int  # sample count
+    block_size: int
+    nnz_max: int  # per-feature nnz budget (ELL width)
+
+    # ---- dense-array compatibility surface (path.py etc. read these) ----
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.p, self.m)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    @property
+    def nblocks(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def p_padded(self) -> int:
+        return self.nblocks * self.block_size
+
+    @property
+    def nbytes(self) -> int:
+        """Actual storage footprint (values + row indices)."""
+        itemsize = np.dtype(self.values.dtype).itemsize
+        slots = self.nblocks * self.block_size * self.nnz_max
+        return slots * (itemsize + 4)
+
+    def to_dense(self) -> jax.Array:
+        """Materialize the dense feature-major ``Xt`` of shape (p, m).
+
+        Padded slots contribute +0.0 via scatter-ADD, so explicit zeros
+        and padding never clobber real entries.
+        """
+        pp = self.p_padded
+        feat = jnp.repeat(jnp.arange(pp), self.nnz_max)
+        dense = jnp.zeros((pp, self.m), self.values.dtype)
+        dense = dense.at[feat, self.rows.reshape(-1)].add(self.values.reshape(-1))
+        return dense[: self.p]
+
+    @classmethod
+    def from_coo(
+        cls,
+        sample_rows: np.ndarray,
+        feature_cols: np.ndarray,
+        vals: np.ndarray,
+        shape: Tuple[int, int],
+        *,
+        block_size: int = 256,
+        nnz_max: Optional[int] = None,
+        dtype=np.float32,
+    ) -> "SparseBlockMatrix":
+        """Build from COO triplets in the natural (sample, feature) = (m, p)
+        orientation of svmlight files. Duplicate coordinates are assumed
+        absent (svmlight guarantees this); the per-feature nnz budget
+        defaults to the max feature nnz and raising it is a no-op, while an
+        insufficient explicit budget is an error (we never silently drop
+        entries)."""
+        m, p = shape
+        sample_rows = np.asarray(sample_rows, np.int64)
+        feature_cols = np.asarray(feature_cols, np.int64)
+        vals = np.asarray(vals)
+        if sample_rows.size and (sample_rows.min() < 0 or sample_rows.max() >= m):
+            raise ValueError("sample row index out of range for shape")
+        if feature_cols.size and (feature_cols.min() < 0 or feature_cols.max() >= p):
+            raise ValueError("feature column index out of range for shape")
+        counts = np.bincount(feature_cols, minlength=p)
+        required = int(counts.max()) if counts.size else 0
+        if nnz_max is None:
+            nnz_max = max(1, required)
+        elif required > nnz_max:
+            raise ValueError(
+                f"nnz budget {nnz_max} too small: densest feature has "
+                f"{required} nonzeros (pass nnz_max>={required})"
+            )
+        nnz_max = max(1, int(nnz_max))
+
+        nblocks = -(-p // block_size)
+        pp = nblocks * block_size
+        values = np.zeros((pp, nnz_max), dtype)
+        rows = np.zeros((pp, nnz_max), np.int32)
+        order = np.argsort(feature_cols, kind="stable")
+        fc = feature_cols[order]
+        starts = np.zeros(p + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        slot = np.arange(fc.size) - starts[fc]
+        values[fc, slot] = vals[order].astype(dtype)
+        rows[fc, slot] = sample_rows[order].astype(np.int32)
+        return cls(
+            values=jnp.asarray(values.reshape(nblocks, block_size, nnz_max)),
+            rows=jnp.asarray(rows.reshape(nblocks, block_size, nnz_max)),
+            p=p,
+            m=m,
+            block_size=block_size,
+            nnz_max=nnz_max,
+        )
+
+    @classmethod
+    def from_dense(
+        cls,
+        Xt: np.ndarray,
+        *,
+        block_size: int = 256,
+        nnz_max: Optional[int] = None,
+    ) -> "SparseBlockMatrix":
+        """Convert a dense feature-major ``Xt`` (p, m) array."""
+        Xt = np.asarray(Xt)
+        p, m = Xt.shape
+        feat, samp = np.nonzero(Xt)
+        return cls.from_coo(
+            samp,
+            feat,
+            Xt[feat, samp],
+            (m, p),
+            block_size=block_size,
+            nnz_max=nnz_max,
+            dtype=Xt.dtype,
+        )
+
+    def astype(self, dtype) -> "SparseBlockMatrix":
+        return dataclasses.replace(self, values=self.values.astype(dtype))
+
+    def density(self) -> float:
+        """Structural density: stored-slot fraction of the logical p*m."""
+        nnz = int(jnp.sum(self.values != 0))
+        return nnz / float(max(1, self.p * self.m))
+
+
+jax.tree_util.register_dataclass(
+    SparseBlockMatrix,
+    data_fields=["values", "rows"],
+    meta_fields=["p", "m", "block_size", "nnz_max"],
+)

@@ -1,0 +1,146 @@
+"""Solver-facing ops over SparseBlockMatrix (XLA fallback + kernel dispatch).
+
+These are the sparse twins of the three O(m)/O(kappa*m) primitives the
+backends share (DESIGN.md §4.5), plus the matvecs the warm start and the
+certification-time duality gap need. Everything is a dense gather +
+reduction over the rectangular block-ELL arrays, so all ops jit cleanly
+and cost O(touched_slots) = O(kappa * nnz_max) instead of O(kappa * m).
+
+Score/stat accumulation is f32 regardless of storage dtype (the dense
+Pallas kernels' ``preferred_element_type=jnp.float32`` contract), but the
+solver-facing results are returned in the matrix's STORAGE dtype — the
+same boundary the dense XLA backend has (``Xt @ y`` on bf16 accumulates
+in f32 and yields bf16), which keeps the solver's weakly-typed scalar
+recursions in the storage dtype end to end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_grad.ref import sparse_sampled_scores_ref
+from repro.kernels.sparse_grad.sparse_grad import sparse_sampled_scores
+from repro.sparse.matrix import SparseBlockMatrix
+
+
+def sparse_block_scores(
+    mat: SparseBlockMatrix,
+    resid: jax.Array,
+    blk: jax.Array,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """FW scores (-z_i^T R) for the features of the sampled blocks.
+
+    ``use_kernel`` routes through the Pallas scalar-prefetch kernel
+    (``kernels/sparse_grad``); otherwise the pure-XLA oracle runs — the
+    off-TPU production path, not just a test double.
+    """
+    if use_kernel:
+        return sparse_sampled_scores(
+            mat.values, mat.rows, resid, blk, interpret=interpret
+        )
+    return sparse_sampled_scores_ref(mat.values, mat.rows, resid, blk)
+
+
+def sparse_fw_vertex(
+    mat: SparseBlockMatrix,
+    resid: jax.Array,
+    blk: jax.Array,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = False,
+):
+    """(i_star, g_star) over the sampled blocks, masking padded features.
+
+    Padded ELL slots and padded tail features score exactly 0, but they
+    must still be excluded from the argmax (an all-zero sample would
+    otherwise select a phantom coordinate) — same contract as the dense
+    ``fw_grad.ops.fw_vertex`` with ``p_valid``.
+    """
+    scores = sparse_block_scores(
+        mat, resid, blk, use_kernel=use_kernel, interpret=interpret
+    )
+    idx = (
+        blk[:, None] * mat.block_size + jnp.arange(mat.block_size)[None, :]
+    ).reshape(-1)
+    mag = jnp.where(idx < mat.p, jnp.abs(scores), -1.0)
+    j = jnp.argmax(mag)
+    return idx[j], scores[j].astype(mat.dtype)
+
+
+def sparse_gather_vertex(mat: SparseBlockMatrix, resid: jax.Array, idx: jax.Array):
+    """(i_star, g_star) for arbitrary sampled coordinates ('uniform' mode).
+
+    Width-1 gathers have no aligned-block structure to prefetch, so this
+    is XLA-only (mirroring how the dense kernel path degrades uniform
+    sampling to width-1 bricks). ``idx`` entries are < p by construction.
+    """
+    b = idx // mat.block_size
+    t = idx % mat.block_size
+    vals = mat.values[b, t].astype(jnp.float32)  # (kappa, nnz_max)
+    rows = mat.rows[b, t]
+    scores = -jnp.sum(vals * jnp.take(resid.astype(jnp.float32), rows, axis=0), axis=1)
+    j = jnp.argmax(jnp.abs(scores))
+    return idx[j], scores[j].astype(mat.dtype)
+
+
+def sparse_colstats(mat: SparseBlockMatrix, y: jax.Array):
+    """One pass over the stored slots: z_i^T y and ||z_i||^2 (paper §4.2).
+
+    O(total stored nnz) instead of the dense O(p * m) sweep. Accumulates
+    in f32 and returns length-p arrays in the storage dtype (padding
+    sliced off).
+    """
+    vals = mat.values.astype(jnp.float32)
+    gathered = jnp.take(y.astype(jnp.float32), mat.rows, axis=0)
+    zty = jnp.sum(vals * gathered, axis=2).reshape(-1)[: mat.p]
+    znorm2 = jnp.sum(vals * vals, axis=2).reshape(-1)[: mat.p]
+    return zty.astype(mat.dtype), znorm2.astype(mat.dtype)
+
+
+def sparse_column(mat: SparseBlockMatrix, i: jax.Array):
+    """(values, rows) ELL slots of feature ``i`` — the z_star the residual
+    recursion (eq. 10) touches. One dynamic gather of nnz_max slots."""
+    b = i // mat.block_size
+    t = i % mat.block_size
+    return mat.values[b, t], mat.rows[b, t]
+
+
+def sparse_residual_update(
+    resid: jax.Array,
+    y: jax.Array,
+    col_vals: jax.Array,
+    col_rows: jax.Array,
+    lam: jax.Array,
+    delta_t: jax.Array,
+) -> jax.Array:
+    """R <- (1-lam) R + lam (y - delta_t z_star), z_star sparse.
+
+    The dense O(m) part is two vector ops; the z_star term is a
+    scatter-add over nnz_max slots (padded slots add 0.0 at row 0 — a
+    structural no-op).
+    """
+    out = (1.0 - lam) * resid + lam * y
+    return out.at[col_rows].add((-lam * delta_t) * col_vals.astype(resid.dtype))
+
+
+def sparse_matvec(mat: SparseBlockMatrix, beta: jax.Array) -> jax.Array:
+    """X @ alpha for a coefficient vector of length p (warm-start init)."""
+    pp = mat.p_padded
+    beta_pad = jnp.zeros((pp,), jnp.float32).at[: mat.p].set(
+        beta.astype(jnp.float32)
+    )
+    contrib = mat.values.reshape(pp, mat.nnz_max).astype(jnp.float32) * beta_pad[:, None]
+    out = jnp.zeros((mat.m,), jnp.float32)
+    out = out.at[mat.rows.reshape(-1)].add(contrib.reshape(-1))
+    return out.astype(beta.dtype)
+
+
+def sparse_transpose_matvec(mat: SparseBlockMatrix, r: jax.Array) -> jax.Array:
+    """Xt @ r over ALL features — O(total nnz). Certification/grids only
+    (duality_gap, lambda_grid); the hot loop never calls this."""
+    vals = mat.values.astype(jnp.float32)
+    gathered = jnp.take(r.astype(jnp.float32), mat.rows, axis=0)
+    return jnp.sum(vals * gathered, axis=2).reshape(-1)[: mat.p].astype(mat.dtype)

@@ -47,6 +47,17 @@ class TestKappaRules:
         assert kappa_blocks(100, 128) == 128
         assert kappa_blocks(129, 128) == 256
 
+    def test_blocks_clamped_to_p(self):
+        """Regression: without the clamp a kappa request > p implied more
+        blocks than exist — inconsistent with the solver's nblocks clamp
+        (fw_lasso._sample_block_starts) and a replace=False crash."""
+        assert kappa_blocks(1000, 128, p=300) == 384  # ceil(300/128)*128
+        assert kappa_blocks(1000, 128, p=128) == 128
+        assert kappa_blocks(64, 128, p=2000) == 128  # clamp only binds above p
+        assert kappa_blocks(257, 128, p=2000) == 384
+        with pytest.raises(ValueError):
+            kappa_blocks(64, 128, p=0)
+
 
 class TestSamplingDistribution:
     def test_uniform_marginal(self):

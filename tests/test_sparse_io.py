@@ -1,0 +1,217 @@
+"""Sparse IO layer (ISSUE 2): svmlight round-trip, .npz shard streaming
+equivalence, and the data/proxies.py densification guard + sparse-native
+proxy builder.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FWConfig, fw_solve
+from repro.data import dense_proxy_bytes, make_proxy, make_sparse_proxy
+from repro.data.proxies import make_sparse_coo
+from repro.sparse import (
+    COOData,
+    SparseBlockMatrix,
+    io as sio,
+)
+
+
+def _coo(seed=0, m=57, p=301, density=0.03):
+    rows, cols, vals, y, _ = make_sparse_coo(m, p, density, 10, seed=seed)
+    return sio.COOData(rows, cols, vals, y, (m, p))
+
+
+def _canon(d: COOData):
+    order = np.lexsort((d.cols, d.rows))
+    return d.rows[order], d.cols[order], d.vals[order]
+
+
+class TestSvmlight:
+    @pytest.mark.parametrize("zero_based", [False, True])
+    def test_roundtrip(self, tmp_path, zero_based):
+        data = _coo()
+        path = tmp_path / "t.svm"
+        sio.save_svmlight(path, data, zero_based=zero_based)
+        # explicit base on load: auto-detection cannot distinguish a
+        # 0-based file with an empty feature 0 from a 1-based file
+        back = sio.load_svmlight(path, n_features=data.shape[1], zero_based=zero_based)
+        assert back.shape == data.shape
+        for a, b in zip(_canon(data), _canon(back)):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+        np.testing.assert_allclose(back.y, data.y, rtol=1e-6)
+
+    def test_auto_base_detection_one_based(self, tmp_path):
+        path = tmp_path / "one.svm"
+        path.write_text("1.5 1:2.0 7:3.0\n-0.5 2:1.0\n")
+        back = sio.load_svmlight(path)
+        assert back.shape == (2, 7)  # max index 7, 1-based -> p=7
+        assert set(back.cols.tolist()) == {0, 1, 6}
+
+    def test_comments_and_qid_ignored(self, tmp_path):
+        path = tmp_path / "q.svm"
+        path.write_text("# header\n2.0 qid:4 1:1.0 # trailing\n\n3.0 2:5.0\n")
+        back = sio.load_svmlight(path)
+        assert back.shape[0] == 2
+        np.testing.assert_allclose(back.y, [2.0, 3.0])
+
+    def test_n_features_too_small_raises(self, tmp_path):
+        path = tmp_path / "s.svm"
+        path.write_text("1.0 5:1.0\n")
+        with pytest.raises(ValueError, match="n_features"):
+            sio.load_svmlight(path, n_features=2)
+
+    def test_svmlight_to_solver(self, tmp_path):
+        """Full text -> matrix -> solve pipeline."""
+        data = _coo(seed=5, m=40, p=260)
+        path = tmp_path / "full.svm"
+        sio.save_svmlight(path, data)
+        back = sio.load_svmlight(path, n_features=260)
+        mat = SparseBlockMatrix.from_coo(
+            back.rows, back.cols, back.vals, back.shape, block_size=128
+        )
+        res = fw_solve(
+            mat, jnp.asarray(back.y),
+            FWConfig(delta=5.0, backend="sparse", kappa=32, max_iters=300, tol=1e-4),
+            jax.random.PRNGKey(0),
+        )
+        assert bool(jnp.isfinite(res.objective))
+
+
+class TestSvmlightStreaming:
+    def test_streaming_conversion_equals_in_memory(self, tmp_path):
+        """convert_svmlight_to_shards == load_svmlight + write_shards."""
+        data = _coo(seed=8)
+        svm = tmp_path / "d.svm"
+        sio.save_svmlight(svm, data)  # 1-based
+        stream_dir = tmp_path / "stream"
+        mem_dir = tmp_path / "mem"
+        sio.convert_svmlight_to_shards(svm, stream_dir, rows_per_shard=11)
+        sio.write_shards(
+            mem_dir, sio.load_svmlight(svm, zero_based=False), rows_per_shard=11
+        )
+        a = sio.load_shards(stream_dir)
+        b = sio.load_shards(mem_dir)
+        assert a.shape == b.shape
+        for x, y in zip(_canon(a), _canon(b)):
+            np.testing.assert_allclose(x, y, rtol=1e-6)
+        np.testing.assert_allclose(a.y, b.y, rtol=1e-6)
+        # and the streamed shards assemble into the same matrix
+        mat_a, _ = sio.load_shards_as_matrix(stream_dir, block_size=64)
+        mat_b, _ = sio.load_shards_as_matrix(mem_dir, block_size=64)
+        np.testing.assert_allclose(
+            np.asarray(mat_a.to_dense()), np.asarray(mat_b.to_dense()), atol=1e-7
+        )
+
+    def test_streaming_n_features_and_empty_rows(self, tmp_path):
+        svm = tmp_path / "e.svm"
+        svm.write_text("1.0 3:2.0\n0.5\n-1.0 1:1.0 7:4.0\n")
+        out = tmp_path / "out"
+        sio.convert_svmlight_to_shards(svm, out, rows_per_shard=2, n_features=10)
+        man = sio.read_manifest(out)
+        assert man["m"] == 3 and man["p"] == 10 and len(man["shards"]) == 2
+        back = sio.load_shards(out)
+        np.testing.assert_allclose(back.y, [1.0, 0.5, -1.0])
+        assert set(back.cols.tolist()) == {0, 2, 6}  # 1-based shifted down
+
+
+class TestShards:
+    def test_roundtrip_nondivisible_rows(self, tmp_path):
+        data = _coo()
+        sio.write_shards(tmp_path, data, rows_per_shard=13)  # 57 % 13 != 0
+        man = sio.read_manifest(tmp_path)
+        assert man["m"] == 57 and man["p"] == 301 and len(man["shards"]) == 5
+        back = sio.load_shards(tmp_path)
+        for a, b in zip(_canon(data), _canon(back)):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+        np.testing.assert_allclose(back.y, data.y)
+
+    def test_streaming_assembly_equals_direct(self, tmp_path):
+        data = _coo(seed=3)
+        sio.write_shards(tmp_path, data, rows_per_shard=10)
+        mat_s, y_s = sio.load_shards_as_matrix(tmp_path, block_size=64)
+        mat_d = SparseBlockMatrix.from_coo(
+            data.rows, data.cols, data.vals, data.shape, block_size=64
+        )
+        np.testing.assert_allclose(
+            np.asarray(mat_s.to_dense()), np.asarray(mat_d.to_dense()), atol=1e-7
+        )
+        np.testing.assert_allclose(y_s, data.y)
+
+    def test_shard_iteration_is_bounded(self, tmp_path):
+        """Each yielded chunk only spans its own row range (out-of-core
+        contract: one shard in memory at a time)."""
+        data = _coo(seed=4)
+        sio.write_shards(tmp_path, data, rows_per_shard=20)
+        for chunk, off in sio.iter_shards(tmp_path):
+            assert chunk.y.shape[0] <= 20
+            if chunk.rows.size:
+                assert chunk.rows.min() >= off
+                assert chunk.rows.max() < off + 20
+
+    def test_budget_too_small_raises(self, tmp_path):
+        data = _coo(seed=6)
+        sio.write_shards(tmp_path, data, rows_per_shard=30)
+        with pytest.raises(ValueError, match="nnz budget"):
+            sio.load_shards_as_matrix(tmp_path, block_size=64, nnz_max=1)
+
+    def test_unknown_format_raises(self, tmp_path):
+        (tmp_path / sio.MANIFEST_NAME).write_text('{"format": "bogus"}')
+        with pytest.raises(ValueError, match="unknown shard format"):
+            sio.read_manifest(tmp_path)
+
+
+class TestProxyGuard:
+    def test_dense_build_over_budget_raises_with_estimate(self):
+        est = dense_proxy_bytes("e2006-log1p", 0.1)
+        with pytest.raises(MemoryError) as ei:
+            make_proxy("e2006-log1p", scale=0.1, max_dense_bytes=64 << 20)
+        msg = str(ei.value)
+        assert f"{est:,}" in msg  # the estimate is in the error
+        assert "make_sparse_proxy" in msg  # and so is the sparse escape hatch
+
+    def test_env_budget(self, monkeypatch):
+        monkeypatch.setenv("REPRO_DENSE_BUDGET_BYTES", "1000")
+        with pytest.raises(MemoryError):
+            make_proxy("e2006-tfidf", scale=0.01)
+
+    def test_under_budget_builds(self):
+        ds = make_proxy("e2006-tfidf", scale=0.005, max_dense_bytes=1 << 30)
+        assert ds.X.shape[0] >= 32
+
+    def test_sparse_proxy_of_dense_dataset_raises(self):
+        with pytest.raises(ValueError, match="dense"):
+            make_sparse_proxy("pyrim", scale=0.01)
+
+    def test_sparse_proxy_beyond_dense_budget_solves(self):
+        """ISSUE 2 acceptance: a scale whose DENSE build exceeds the budget
+        must still build sparsely and solve with backend='sparse'."""
+        scale = 0.02
+        budget = 32 << 20  # dense would need ~130 MB at this scale
+        assert dense_proxy_bytes("e2006-log1p", scale) > budget
+        with pytest.raises(MemoryError):
+            make_proxy("e2006-log1p", scale=scale, max_dense_bytes=budget)
+        ds = make_sparse_proxy("e2006-log1p", scale=scale, seed=0)
+        assert ds.mat.nbytes < budget  # sparse build fits where dense cannot
+        p = ds.mat.shape[0]
+        res = fw_solve(
+            ds.mat, jnp.asarray(ds.y),
+            FWConfig(delta=25.0, backend="sparse", sampling="uniform",
+                     kappa=max(64, p // 100), max_iters=400, tol=1e-4),
+            jax.random.PRNGKey(0),
+        )
+        assert bool(jnp.isfinite(res.objective))
+        assert float(jnp.sum(jnp.abs(res.alpha))) <= 25.0 * (1 + 1e-5)
+        assert int(res.active) > 0
+
+    def test_sparse_proxy_conditioning(self):
+        """Unit column norms + centered y (the §4.1 contract, uncentered X)."""
+        ds = make_sparse_proxy("e2006-tfidf", scale=0.01, seed=1)
+        _, zn2 = __import__("repro.sparse.ops", fromlist=["ops"]).sparse_colstats(
+            ds.mat, jnp.zeros(ds.mat.m)
+        )
+        nz = np.asarray(zn2) > 0
+        np.testing.assert_allclose(np.asarray(zn2)[nz], 1.0, rtol=1e-4)
+        assert abs(float(ds.y.mean())) < 1e-4
