@@ -60,9 +60,35 @@ def load_dataset(name: str):
 # text datasets only: name -> (scale_ci, scale_paper), matching DATASETS
 SPARSE_DATASETS = {"e2006-tfidf": (0.02, 0.15), "e2006-log1p": (0.005, 0.05)}
 
+# real converted shards (scripts/fetch_libsvm.py) live here; when a
+# dataset's manifest exists, benchmarks prefer it over the proxy
+REPRO_DATA_DIR = os.environ.get("REPRO_DATA_DIR", "data/libsvm")
 
-def load_sparse_dataset(name: str):
-    """Sparse-native proxy (block-ELL matrix, no densification)."""
+
+def real_shard_dir(name: str):
+    """Path of the converted real dataset, or None when not fetched."""
+    d = os.path.join(REPRO_DATA_DIR, name)
+    return d if os.path.exists(os.path.join(d, "manifest.json")) else None
+
+
+def load_sparse_dataset(name: str, prefer_real: bool = True):
+    """Sparse-native dataset (block-ELL matrix, no densification).
+
+    Real converted shards (scripts/fetch_libsvm.py) are preferred when
+    present — the returned dataset then has ``coef=None`` (no generating
+    coefficients) and a ``-real`` suffix on its name; otherwise the
+    deterministic synthetic proxy at the configured REPRO_BENCH_SCALE.
+    """
+    shard_dir = real_shard_dir(name) if prefer_real else None
+    if shard_dir is not None:
+        from repro.data.proxies import SparseDataset
+        from repro.sparse.io import load_shards_as_matrix
+
+        mat, y = load_shards_as_matrix(shard_dir)
+        y = np.asarray(y, np.float32)
+        y = y - y.mean()  # same targets contract as the proxies
+        ds = SparseDataset(mat=mat, y=y, coef=None, name=f"{name}-real")
+        return ds.mat, jnp.asarray(ds.y), ds
     scale_ci, scale_paper = SPARSE_DATASETS[name]
     ds = make_sparse_proxy(name, scale=scale_ci if SCALE == "ci" else scale_paper, seed=0)
     return ds.mat, jnp.asarray(ds.y), ds

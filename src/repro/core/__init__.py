@@ -1,35 +1,51 @@
-"""Core: the paper's contribution — stochastic Frank-Wolfe for the Lasso."""
+"""Core: the paper's contribution — stochastic Frank-Wolfe for the Lasso,
+grown into a pluggable-oracle engine serving the whole solver family
+(lasso / logistic / elastic-net) on every backend (DESIGN.md §Engine)."""
+from repro.core.engine import ColStats, EngineState, SolveResult, precompute_colstats
 from repro.core.fw_lasso import (
-    ColStats,
+    LASSO,
     FWResult,
     FWState,
+    LassoOracle,
     duality_gap,
     fw_solve,
     fw_solve_with_history,
     fw_step,
     init_state,
     objective,
-    precompute_colstats,
 )
+from repro.core.fw_logistic import LOGISTIC, LogisticOracle, logistic_solve
+from repro.core.fw_elasticnet import ENOracle, en_solve
 from repro.core.solver_config import CDConfig, FISTAConfig, FWConfig
-from repro.core import baselines, path, projections, sampling
+from repro.core import baselines, engine, path, projections, sampling, vertex
 
 __all__ = [
     "ColStats",
+    "EngineState",
+    "SolveResult",
     "FWResult",
     "FWState",
     "FWConfig",
     "CDConfig",
     "FISTAConfig",
+    "LASSO",
+    "LOGISTIC",
+    "LassoOracle",
+    "LogisticOracle",
+    "ENOracle",
     "duality_gap",
     "fw_solve",
     "fw_solve_with_history",
     "fw_step",
     "init_state",
     "objective",
+    "logistic_solve",
+    "en_solve",
     "precompute_colstats",
     "baselines",
+    "engine",
     "path",
     "projections",
     "sampling",
+    "vertex",
 ]

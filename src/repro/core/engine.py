@@ -1,0 +1,352 @@
+"""Backend-dispatched stochastic Frank-Wolfe engine (DESIGN.md §Engine).
+
+ONE hot loop serves the whole solver family (lasso / logistic /
+elastic-net) on all three backends ('xla' | 'pallas' | 'sparse'). The
+paper presents the extensions as "easily obtained" from Algorithm 2 —
+the randomized linear-minimization oracle and the O(m) state recursions
+are identical; only the gradient-with-respect-to-state and the line
+search change — and the engine encodes exactly that split:
+
+* the ENGINE owns the iteration skeleton: PRNG stream, sampled-vertex
+  selection (delegated to ``core.vertex``), the scaled-iterate
+  beta/scale update with underflow renormalization, the
+  ||alpha^{k+1}-alpha^k||_inf stopping statistic with patience, and the
+  while_loop / scan / batched-lane drivers;
+* a PROBLEM ORACLE supplies the objective-specific pieces through a
+  small protocol (see below). Oracles are hashable frozen dataclasses,
+  passed statically into the jitted entry points, so each
+  (oracle, cfg) pair compiles exactly once and a traced ``delta``
+  serves a whole regularization path per compile.
+
+Oracle protocol — what a new objective must provide:
+
+    needs_stats: bool          class attr; True to precompute ColStats
+    extra_dots: int            per-step dot-product surcharge (accounting)
+    init_co(y, v, beta, dtype) co-state from X@alpha0 (``v``; None = cold)
+    cograd(co, y) -> (m,)      w with sampled linear scores = -z_i^T w
+    score_extra(beta, scale)   optional per-coordinate score shift
+                               (idx-array -> addend), e.g. EN's +l2*a_i
+    line_search(...)           -> (lam, no_progress, aux); ``no_progress``
+                               feeds the stall counter (gap_rtol rule),
+                               ``aux`` is forwarded to update_co
+    update_co(...) -> co       the O(m)/O(1) state recursions + refresh
+    objective(y, stats, co)    final objective value
+
+What the engine guarantees to oracles: the index stream is a pure
+function of (key, cfg, p) shared by every backend ('uniform' replays
+bit-identically across backends); padded coordinates (dense-kernel tail
+rows, sparse tail features, padded ELL slots) score exactly zero and are
+masked out of the argmax, so ``i_star < p`` always; ``beta``, ``stats``
+and results stay at the true p regardless of backend padding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vertex
+from repro.core.solver_config import FWConfig
+from repro.kernels.colstats.colstats import colstats as _colstats_kernel
+from repro.sparse import ops as sparse_ops
+from repro.sparse.matrix import SparseBlockMatrix
+
+
+class ColStats(NamedTuple):
+    """Per-column statistics precomputed once before the iterations (§4.2)."""
+
+    zty: jax.Array  # (p,)  z_i^T y
+    znorm2: jax.Array  # (p,)  ||z_i||^2
+    yty: jax.Array  # ()    y^T y
+
+
+class EngineState(NamedTuple):
+    """Loop state shared by every oracle. ``alpha = scale * beta``; ``co``
+    is the oracle's co-state pytree (residual/margin + scalar recursions)."""
+
+    beta: jax.Array  # (p,) unscaled coefficients
+    scale: jax.Array  # ()  multiplicative scale
+    co: Any  # oracle co-state (NamedTuple pytree)
+    maxabs: jax.Array  # ()  running upper bound on ||alpha||_inf
+    step_inf: jax.Array  # ()  ||alpha^{k+1} - alpha^k||_inf (bound)
+    stall: jax.Array  # ()  consecutive sub-tolerance steps
+    n_dots: jax.Array  # ()  length-m dot products consumed so far
+    k: jax.Array  # ()  iteration counter
+    key: jax.Array  # PRNG key
+
+
+class SolveResult(NamedTuple):
+    alpha: jax.Array
+    objective: jax.Array
+    iterations: jax.Array
+    n_dots: jax.Array
+    active: jax.Array  # () number of nonzero coefficients
+    converged: jax.Array
+
+
+def precompute_colstats(
+    Xt, y: jax.Array, cfg: Optional[FWConfig] = None
+) -> ColStats:
+    """One full pass over X: z_i^T y and ||z_i||^2 for every column (§4.2).
+
+    With ``cfg.backend == 'pallas'`` the fused single-sweep kernel
+    (repro.kernels.colstats) computes both statistics in one HBM pass.
+    A SparseBlockMatrix sweeps its stored slots only — O(nnz), not
+    O(p*m) — through the fused ``kernels/sparse_colstats`` Pallas twin
+    when the sparse-kernel dispatch is on (TPU auto / forced by cfg).
+    """
+    if isinstance(Xt, SparseBlockMatrix):
+        if cfg is not None:
+            zty, znorm2 = sparse_ops.sparse_colstats(
+                Xt,
+                y,
+                use_kernel=vertex.use_sparse_kernel(cfg),
+                interpret=vertex.use_interpret(cfg),
+            )
+        else:
+            zty, znorm2 = sparse_ops.sparse_colstats(Xt, y)
+        return ColStats(zty=zty, znorm2=znorm2, yty=jnp.dot(y, y))
+    if cfg is not None and cfg.backend == "pallas":
+        zty, znorm2 = _colstats_kernel(
+            Xt, y, m_tile=cfg.m_tile, interpret=vertex.use_interpret(cfg)
+        )
+    else:
+        zty = Xt @ y
+        znorm2 = jnp.sum(Xt * Xt, axis=1)
+    return ColStats(zty=zty, znorm2=znorm2, yty=jnp.dot(y, y))
+
+
+def _patience(cfg: FWConfig) -> int:
+    return cfg.patience if cfg.sampling != "full" else 1
+
+
+def init_state(oracle, Xt, y, key, alpha0=None) -> EngineState:
+    """Start from the null solution, or warm-start from ``alpha0``."""
+    p = Xt.shape[0]
+    dtype = Xt.dtype
+    if alpha0 is None:
+        beta = jnp.zeros((p,), dtype)
+        v = None
+        maxabs = jnp.zeros((), dtype)
+    else:
+        beta = alpha0.astype(dtype)
+        v = vertex.matvec(Xt, beta)  # X alpha, O(nnz) sparse
+        maxabs = jnp.max(jnp.abs(beta))
+    return EngineState(
+        beta=beta,
+        scale=jnp.ones((), dtype),
+        co=oracle.init_co(y, v, beta, dtype),
+        maxabs=maxabs,
+        step_inf=jnp.full((), jnp.inf, dtype),
+        stall=jnp.zeros((), jnp.int32),
+        n_dots=jnp.zeros((), jnp.int32),
+        k=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+
+
+def step(oracle, Xt, y, stats, state: EngineState, cfg: FWConfig, delta) -> EngineState:
+    """One randomized Frank-Wolfe step (paper Algorithm 2, any oracle).
+
+    ``delta`` may be a traced array: the l1 radius enters the math only
+    through scalar formulas, so keeping it dynamic lets a whole
+    regularization path reuse ONE compiled solver (§Perf). ``Xt`` may be
+    feature-padded (``vertex.pad_backend_matrix``); ``beta`` and
+    ``stats`` stay at the true p.
+    """
+    p = state.beta.shape[0]
+    key, sub = jax.random.split(state.key)
+
+    # -- step 2: score the sampled coordinates against the co-gradient ------
+    w = oracle.cograd(state.co, y)
+    extra_fn = oracle.score_extra(state.beta, state.scale)
+    i_star, g_raw, g_sel, n_scored = vertex.sample_vertex(
+        Xt, w, sub, p, cfg, extra_fn
+    )
+
+    # -- step 3: FW vertex sign (eq. 6) -------------------------------------
+    delta_t = -delta * jnp.sign(g_sel)  # delta-tilde
+
+    # -- step 4: oracle line search (closed-form eq. 8, or bisection) -------
+    a_star = state.scale * state.beta[i_star]
+    lam, no_progress, aux = oracle.line_search(
+        Xt, y, stats, state.co, i_star, g_raw, g_sel, a_star, delta_t, cfg
+    )
+
+    # -- step 5: coefficient update in scaled representation ---------------
+    one_m = 1.0 - lam
+    new_scale = state.scale * one_m
+    # renormalize when the scale underflows (rare O(p) event)
+    need_renorm = new_scale < cfg.renorm_threshold
+    beta, scale = jax.lax.cond(
+        need_renorm,
+        lambda b, s: (b * s, jnp.ones((), b.dtype)),
+        lambda b, s: (b, s),
+        state.beta,
+        new_scale,
+    )
+    beta = beta.at[i_star].add(delta_t * lam / jnp.maximum(scale, cfg.eps_den))
+
+    # -- step 6: oracle state recursions (eq. 10 / margin + S/F/Q + refresh)
+    co = oracle.update_co(
+        Xt, y, stats, state.co, beta, scale, i_star, a_star, lam, delta_t,
+        state.k, cfg, aux,
+    )
+
+    # -- stopping statistic: ||alpha_{k+1} - alpha_k||_inf upper bound ------
+    alpha_istar_new = scale * beta[i_star]
+    step_inf = lam * jnp.maximum(state.maxabs, jnp.abs(delta_t - a_star))
+    maxabs = jnp.maximum(one_m * state.maxabs, jnp.abs(alpha_istar_new))
+    stall = jnp.where((step_inf <= cfg.tol) | no_progress, state.stall + 1, 0)
+
+    return EngineState(
+        beta=beta,
+        scale=scale,
+        co=co,
+        maxabs=maxabs,
+        step_inf=step_inf,
+        stall=stall,
+        n_dots=state.n_dots + n_scored + oracle.extra_dots,
+        k=state.k + 1,
+        key=key,
+    )
+
+
+def _result(oracle, y, stats, final: EngineState, patience: int) -> SolveResult:
+    alpha = final.scale * final.beta
+    return SolveResult(
+        alpha=alpha,
+        objective=oracle.objective(y, stats, final.co),
+        iterations=final.k,
+        n_dots=final.n_dots,
+        active=jnp.sum(alpha != 0.0),
+        converged=final.stall >= patience,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("oracle", "cfg"))
+def solve(
+    oracle,
+    Xt,
+    y: jax.Array,
+    cfg: FWConfig,
+    key: jax.Array,
+    alpha0: Optional[jax.Array] = None,
+    delta=None,
+) -> SolveResult:
+    """Run the oracle's Algorithm-2 analogue until
+    ||alpha_{k+1}-alpha_k||_inf <= tol for ``patience`` consecutive
+    iterations, or max_iters. ``delta`` (traced) overrides cfg.delta —
+    one compile serves the whole path."""
+    vertex.check_matrix_backend(Xt, cfg)
+    delta = jnp.asarray(cfg.delta if delta is None else delta)
+    stats = precompute_colstats(Xt, y, cfg) if oracle.needs_stats else None
+    state0 = init_state(oracle, Xt, y, key, alpha0)
+    patience = _patience(cfg)
+    Xt = vertex.pad_backend_matrix(Xt, cfg)  # once, outside the hot loop
+
+    def cond(state: EngineState):
+        return (state.k < cfg.max_iters) & (state.stall < patience)
+
+    def body(state: EngineState):
+        return step(oracle, Xt, y, stats, state, cfg, delta)
+
+    final = jax.lax.while_loop(cond, body, state0)
+    return _result(oracle, y, stats, final, patience)
+
+
+@functools.partial(jax.jit, static_argnames=("oracle", "cfg", "n_iters"))
+def solve_with_history(
+    oracle,
+    Xt,
+    y: jax.Array,
+    cfg: FWConfig,
+    key: jax.Array,
+    n_iters: int,
+    alpha0: Optional[jax.Array] = None,
+):
+    """Fixed-iteration run recording the objective per step (convergence
+    plots). Returns (result, objective_history[n_iters])."""
+    vertex.check_matrix_backend(Xt, cfg)
+    stats = precompute_colstats(Xt, y, cfg) if oracle.needs_stats else None
+    state0 = init_state(oracle, Xt, y, key, alpha0)
+    Xt_run = vertex.pad_backend_matrix(Xt, cfg)
+
+    def body(state, _):
+        new = step(oracle, Xt_run, y, stats, state, cfg, jnp.asarray(cfg.delta))
+        return new, oracle.objective(y, stats, new.co)
+
+    final, hist = jax.lax.scan(body, state0, None, length=n_iters)
+    return _result(oracle, y, stats, final, _patience(cfg)), hist
+
+
+def _lane_mask(active: jax.Array, leaf: jax.Array) -> jax.Array:
+    """Broadcast a (lanes,) bool against a (lanes, ...) state leaf."""
+    return active.reshape(active.shape + (1,) * (leaf.ndim - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("oracle", "cfg"))
+def solve_batched(
+    oracle,
+    Xt,
+    y: jax.Array,
+    cfg: FWConfig,
+    keys: jax.Array,
+    alpha0s: jax.Array,
+    deltas: jax.Array,
+):
+    """Solve a batch of lanes (one delta / key / warm start each) in ONE
+    while_loop with per-lane early exit (DESIGN.md §Path).
+
+    Unlike a plain vmap-of-while_loop, the lane states are batched
+    explicitly: column statistics and init run once outside the lane
+    axis, the loop condition is ``any(lane active)``, and converged lanes
+    are frozen by a masked update — their PRNG stream, counters, and
+    co-state stop advancing, so each lane's result is exactly what the
+    sequential solver would produce. Returns ``(batched SolveResult,
+    saved_iters)`` where ``saved_iters`` counts the lane-iterations NOT
+    spent past each lane's own convergence (the pruning win vs running
+    every lane to the slowest lane's stop).
+    """
+    vertex.check_matrix_backend(Xt, cfg)
+    stats = precompute_colstats(Xt, y, cfg) if oracle.needs_stats else None
+    states0 = jax.vmap(lambda k, a0: init_state(oracle, Xt, y, k, a0))(
+        keys, alpha0s
+    )
+    patience = _patience(cfg)
+    Xt_run = vertex.pad_backend_matrix(Xt, cfg)
+
+    def lane_active(states):
+        return (states.k < cfg.max_iters) & (states.stall < patience)
+
+    def cond(carry):
+        states, _ = carry
+        return jnp.any(lane_active(states))
+
+    def body(carry):
+        states, saved = carry
+        active = lane_active(states)
+        stepped = jax.vmap(
+            lambda s, d: step(oracle, Xt_run, y, stats, s, cfg, d)
+        )(states, deltas)
+        merged = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(_lane_mask(active, n), n, o), stepped, states
+        )
+        return merged, saved + jnp.sum((~active).astype(jnp.int32))
+
+    final, saved = jax.lax.while_loop(
+        cond, body, (states0, jnp.zeros((), jnp.int32))
+    )
+    alpha = final.scale[:, None] * final.beta
+    objective = jax.vmap(lambda co: oracle.objective(y, stats, co))(final.co)
+    res = SolveResult(
+        alpha=alpha,
+        objective=objective,
+        iterations=final.k,
+        n_dots=final.n_dots,
+        active=jnp.sum(alpha != 0.0, axis=1),
+        converged=final.stall >= patience,
+    )
+    return res, saved

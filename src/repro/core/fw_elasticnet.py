@@ -1,4 +1,4 @@
-"""Stochastic Frank-Wolfe for the ElasticNet (paper §6 extension).
+"""ElasticNet problem oracle for the stochastic FW engine (paper §6).
 
     min_alpha  1/2 ||X a - y||^2 + (l2/2) ||a||^2   s.t.  ||a||_1 <= delta
 
@@ -13,158 +13,115 @@ scalar recursions by additionally tracking Q^k = ||a^k||^2:
              = (S - 2 dt G + dt^2 ||z||^2) + l2*(Q - 2 dt a_i + dt^2)
     Q_{k+1}  = (1-l)^2 Q + 2 l (1-l) dt a_i + l^2 dt^2
 
-Validated against FISTA on the augmented design [X; sqrt(l2) I]
-(tests/test_elasticnet.py).
+The ``+l2 * a_i`` gradient term rides the engine's per-coordinate score
+shift (``score_extra``), so the sampled-vertex dispatch — including the
+Pallas kernels and the block-ELL sparse backend — is shared untouched
+with the other oracles (DESIGN.md §Engine). Validated against FISTA on
+the augmented design [X; sqrt(l2) I] (tests/test_extensions.py).
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fw_lasso import ColStats, precompute_colstats, _sample_indices
+from repro.core import engine, fw_lasso, vertex
 from repro.core.solver_config import FWConfig
 
+ENResult = engine.SolveResult
 
-class ENState(NamedTuple):
-    beta: jax.Array
-    scale: jax.Array
-    resid: jax.Array
+
+class ENCo(NamedTuple):
+    """Elastic-net co-state: lasso recursions plus Q = ||a||^2."""
+
+    resid: jax.Array  # (m,)
     s_quad: jax.Array  # ||X a||^2
     f_lin: jax.Array  # (X a)^T y
     q_norm: jax.Array  # ||a||^2
-    maxabs: jax.Array
-    step_inf: jax.Array
-    stall: jax.Array
-    n_dots: jax.Array
-    k: jax.Array
-    key: jax.Array
 
 
-class ENResult(NamedTuple):
-    alpha: jax.Array
-    objective: jax.Array  # full elastic-net objective
-    iterations: jax.Array
-    n_dots: jax.Array
-    active: jax.Array
-    converged: jax.Array
+@dataclasses.dataclass(frozen=True)
+class ENOracle:
+    """Problem oracle: elastic-net over the l1 ball, l2 penalty strength
+    baked in statically (it shapes the compiled line search)."""
+
+    l2: float
+
+    needs_stats = True
+    extra_dots = 0
+
+    def init_co(self, y, v, beta, dtype) -> ENCo:
+        if v is None:
+            zero = jnp.zeros((), dtype)
+            return ENCo(resid=y.astype(dtype), s_quad=zero, f_lin=zero, q_norm=zero)
+        return ENCo(
+            resid=y - v,
+            s_quad=jnp.dot(v, v),
+            f_lin=jnp.dot(v, y),
+            q_norm=jnp.dot(beta, beta),
+        )
+
+    def cograd(self, co: ENCo, y):
+        return co.resid
+
+    def score_extra(self, beta, scale):
+        """The +l2 * a_i gradient shift at the sampled coordinates."""
+        return lambda idx: self.l2 * (scale * jnp.take(beta, idx))
+
+    def line_search(
+        self, Xt, y, stats, co: ENCo, i_star, g_raw, g_sel, a_star, delta_t, cfg
+    ):
+        g_x = g_raw  # X-part of the selected gradient coordinate
+        g_lin = g_x + stats.zty[i_star]
+        num = (
+            co.s_quad - delta_t * g_x - co.f_lin
+            + self.l2 * (co.q_norm - delta_t * a_star)
+        )
+        den = (
+            co.s_quad - 2.0 * delta_t * g_lin + delta_t**2 * stats.znorm2[i_star]
+            + self.l2 * (co.q_norm - 2.0 * delta_t * a_star + delta_t**2)
+        )
+        lam = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, 1.0)
+        return lam, jnp.asarray(False), g_lin
+
+    def update_co(
+        self, Xt, y, stats, co: ENCo, beta, scale, i_star, a_star, lam,
+        delta_t, k, cfg, aux,
+    ) -> ENCo:
+        one_m = 1.0 - lam
+        resid = vertex.apply_column_update(Xt, co.resid, y, i_star, lam, delta_t, cfg)
+        s_quad, f_lin, refresh = fw_lasso.sf_update(
+            stats, co.s_quad, co.f_lin, resid, y, i_star, lam, delta_t,
+            aux, k, cfg,
+        )
+        q_norm = (
+            one_m**2 * co.q_norm
+            + 2.0 * lam * one_m * delta_t * a_star
+            + lam**2 * delta_t**2
+        )
+        q_exact = jnp.dot(beta, beta) * scale**2
+        q_norm = jnp.where(refresh, q_exact, q_norm)
+        return ENCo(resid=resid, s_quad=s_quad, f_lin=f_lin, q_norm=q_norm)
+
+    def objective(self, y, stats, co: ENCo):
+        return (
+            0.5 * stats.yty + 0.5 * co.s_quad - co.f_lin
+            + 0.5 * self.l2 * co.q_norm
+        )
 
 
-def en_step(Xt, y, stats: ColStats, state: ENState, cfg: FWConfig, l2: float) -> ENState:
-    p = Xt.shape[0]
-    key, sub = jax.random.split(state.key)
-    idx = _sample_indices(sub, p, cfg)
-
-    rows = jnp.take(Xt, idx, axis=0)
-    alpha_idx = state.scale * jnp.take(state.beta, idx)
-    grad_x = -(rows @ state.resid)  # X-part of gradient
-    grad_s = grad_x + l2 * alpha_idx
-
-    j = jnp.argmax(jnp.abs(grad_s))
-    i_star = idx[j]
-    g_star = grad_s[j]
-    g_x = grad_x[j]
-    a_star = alpha_idx[j]
-
-    delta_t = -cfg.delta * jnp.sign(g_star)
-
-    g_lin = g_x + stats.zty[i_star]
-    num = (
-        state.s_quad - delta_t * g_x - state.f_lin
-        + l2 * (state.q_norm - delta_t * a_star)
-    )
-    den = (
-        state.s_quad - 2.0 * delta_t * g_lin + delta_t**2 * stats.znorm2[i_star]
-        + l2 * (state.q_norm - 2.0 * delta_t * a_star + delta_t**2)
-    )
-    lam = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, 1.0)
-    one_m = 1.0 - lam
-
-    new_scale = state.scale * one_m
-    need_renorm = new_scale < cfg.renorm_threshold
-    beta, scale = jax.lax.cond(
-        need_renorm,
-        lambda b, s: (b * s, jnp.ones((), Xt.dtype)),
-        lambda b, s: (b, s),
-        state.beta,
-        new_scale,
-    )
-    beta = beta.at[i_star].add(delta_t * lam / jnp.maximum(scale, cfg.eps_den))
-
-    z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
-    resid = one_m * state.resid + lam * (y - delta_t * z_star)
-
-    s_quad = (
-        one_m**2 * state.s_quad
-        + 2.0 * delta_t * lam * one_m * g_lin
-        + delta_t**2 * lam**2 * stats.znorm2[i_star]
-    )
-    f_lin = one_m * state.f_lin + delta_t * lam * stats.zty[i_star]
-    q_norm = (
-        one_m**2 * state.q_norm
-        + 2.0 * lam * one_m * delta_t * a_star
-        + lam**2 * delta_t**2
-    )
-
-    refresh = (state.k % cfg.refresh_every) == (cfg.refresh_every - 1)
-    v = y - resid
-    s_quad = jnp.where(refresh, jnp.dot(v, v), s_quad)
-    f_lin = jnp.where(refresh, jnp.dot(v, y), f_lin)
-    q_exact = jnp.dot(beta, beta) * scale**2
-    q_norm = jnp.where(refresh, q_exact, q_norm)
-
-    alpha_new = scale * beta[i_star]
-    step_inf = lam * jnp.maximum(state.maxabs, jnp.abs(delta_t - a_star))
-    maxabs = jnp.maximum(one_m * state.maxabs, jnp.abs(alpha_new))
-    stall = jnp.where(step_inf <= cfg.tol, state.stall + 1, 0)
-
-    return ENState(
-        beta=beta, scale=scale, resid=resid, s_quad=s_quad, f_lin=f_lin,
-        q_norm=q_norm, maxabs=maxabs, step_inf=step_inf, stall=stall,
-        n_dots=state.n_dots + idx.shape[0], k=state.k + 1, key=key,
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "l2"))
 def en_solve(
-    Xt: jax.Array,
+    Xt,
     y: jax.Array,
     cfg: FWConfig,
     l2: float,
     key: jax.Array,
     alpha0: Optional[jax.Array] = None,
+    delta=None,
 ) -> ENResult:
-    p = Xt.shape[0]
-    stats = precompute_colstats(Xt, y)
-    if alpha0 is None:
-        beta = jnp.zeros((p,), Xt.dtype)
-        resid = y.astype(Xt.dtype)
-        s_quad = f_lin = q_norm = maxabs = jnp.zeros((), Xt.dtype)
-    else:
-        beta = alpha0.astype(Xt.dtype)
-        v = beta @ Xt
-        resid = y - v
-        s_quad = jnp.dot(v, v)
-        f_lin = jnp.dot(v, y)
-        q_norm = jnp.dot(beta, beta)
-        maxabs = jnp.max(jnp.abs(beta))
-    state0 = ENState(
-        beta=beta, scale=jnp.ones((), Xt.dtype), resid=resid, s_quad=s_quad,
-        f_lin=f_lin, q_norm=q_norm, maxabs=maxabs,
-        step_inf=jnp.full((), jnp.inf, Xt.dtype), stall=jnp.zeros((), jnp.int32),
-        n_dots=jnp.zeros((), jnp.int32), k=jnp.zeros((), jnp.int32), key=key,
-    )
-    patience = cfg.patience if cfg.sampling != "full" else 1
-
-    def cond(s):
-        return (s.k < cfg.max_iters) & (s.stall < patience)
-
-    final = jax.lax.while_loop(cond, lambda s: en_step(Xt, y, stats, s, cfg, l2), state0)
-    alpha = final.scale * final.beta
-    obj = 0.5 * stats.yty + 0.5 * final.s_quad - final.f_lin + 0.5 * l2 * final.q_norm
-    return ENResult(
-        alpha=alpha, objective=obj, iterations=final.k, n_dots=final.n_dots,
-        active=jnp.sum(alpha != 0.0), converged=final.stall >= patience,
-    )
+    """Elastic-net FW on any backend ('xla'|'pallas'|'sparse'). ``l2`` is
+    static (one compile per strength); ``delta`` (traced) overrides
+    cfg.delta so one compile serves a whole regularization path."""
+    return engine.solve(ENOracle(l2=float(l2)), Xt, y, cfg, key, alpha0, delta)

@@ -1,4 +1,4 @@
-"""Stochastic Frank-Wolfe for the constrained Lasso (paper Algorithm 2).
+"""Lasso problem oracle for the stochastic FW engine (paper Algorithm 2).
 
 Implements the randomized FW iteration of Frandi et al. (2015):
 
@@ -11,412 +11,222 @@ Key paper mechanics reproduced faithfully:
   * uniform random coordinate sampling (Lemma 1 / Prop. 2),
   * per-iteration cost O(kappa * m), independent of p.
 
-Implementation notes (beyond the paper, recorded in DESIGN.md):
-  * the design matrix is stored FEATURE-MAJOR: ``Xt`` has shape (p, m), so
-    one predictor z_i = Xt[i] is a contiguous row and the sampled-gradient
-    gather touches kappa contiguous stripes (this is also the layout the
-    TPU kernel tiles over);
-  * the iterate is stored as ``alpha = scale * beta`` so the (1-lambda)
-    shrink of every coordinate is O(1) instead of O(p);
-  * block sampling (contiguous aligned blocks of coordinates) is provided
-    as the TPU-native sampling mode — Lemma 1 only needs P(i in S) = kappa/p,
-    which uniform aligned-block sampling preserves when bs | p;
-  * a running upper bound on ||alpha||_inf gives the paper's
-    ||alpha^{k+1} - alpha^k||_inf <= eps stopping rule without O(p) work.
-    Because a sampled iteration can legitimately produce lambda = 0 (the
-    sample contained no descent vertex), the rule only fires after
-    ``patience`` consecutive sub-tolerance steps. A step whose sampled
-    duality gap sits below the fp32 noise floor of its own terms also
-    counts as a stall (``gap_rtol``, DESIGN.md §Stopping) so warm starts
-    from a converged iterate terminate immediately;
-  * ``cfg.backend`` selects the iteration engine: 'xla' (jnp gathers),
-    'pallas' (the fused TPU kernels under repro.kernels; interpret mode
-    off-TPU), with zero-padded feature tails for non-divisible shapes, or
-    'sparse' (``Xt`` is a repro.sparse.SparseBlockMatrix; the sampled
-    gradient, residual update, and colstats all run over the block-ELL
-    slots — O(kappa * nnz_max) per step instead of O(kappa * m)).
+Since the engine refactor (DESIGN.md §Engine) this module holds ONLY the
+lasso-specific pieces — the residual co-state, the closed-form line
+search with its sampled-duality-gap stall test, and the S/F recursions —
+packaged as ``LassoOracle`` for ``repro.core.engine``. The iteration
+skeleton (sampling, backend dispatch over 'xla' | 'pallas' | 'sparse',
+scaled-iterate update, stopping rule, loop/scan/batched drivers) lives
+in ``engine.py`` + ``vertex.py`` and is shared with the logistic
+and elastic-net oracles. The public API (``fw_solve``,
+``fw_solve_with_history``, ``fw_step``, ``init_state``, ``FWState``) is
+preserved as thin wrappers; the uniform-sampling trajectory is
+bit-identical to the pre-engine solver (tests/test_engine.py pins it).
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine, vertex
+from repro.core.engine import ColStats, EngineState, precompute_colstats
 from repro.core.solver_config import FWConfig
-from repro.kernels.colstats.colstats import colstats as _colstats_kernel
-from repro.kernels.fw_grad.ops import fw_vertex as _fw_vertex_kernel
-from repro.kernels.padding import pad_rows as _pad_features
-from repro.kernels.residual_update.residual_update import (
-    residual_update as _residual_update_kernel,
-)
 from repro.sparse import ops as sparse_ops
 from repro.sparse.matrix import SparseBlockMatrix
 
+# Back-compat aliases: these helpers moved to core.vertex in the engine
+# refactor; tests and downstream code keep importing them from here.
+_sample_indices = vertex.sample_indices
+_sample_block_starts = vertex.sample_block_starts
+_use_interpret = vertex.use_interpret
+_use_sparse_kernel = vertex.use_sparse_kernel
+_check_matrix_backend = vertex.check_matrix_backend
 
-def _use_interpret(cfg: FWConfig) -> bool:
-    """Pallas kernels compile natively on TPU, interpret everywhere else."""
-    if cfg.interpret is not None:
-        return cfg.interpret
-    return jax.default_backend() != "tpu"
-
-
-def _use_sparse_kernel(cfg: FWConfig) -> bool:
-    """'sparse' backend: Pallas prefetch kernel on TPU, XLA gather elsewhere
-    (the XLA path is the production CPU path, not a test stub)."""
-    if cfg.sparse_kernel is not None:
-        return cfg.sparse_kernel
-    return jax.default_backend() == "tpu"
+FWResult = engine.SolveResult
 
 
-def _check_matrix_backend(Xt, cfg: FWConfig) -> None:
-    """Trace-time guard: the matrix layout and the backend must agree."""
-    is_sparse = isinstance(Xt, SparseBlockMatrix)
-    if is_sparse and cfg.backend != "sparse":
-        raise ValueError(
-            f"Xt is a SparseBlockMatrix but cfg.backend={cfg.backend!r}; "
-            "use FWConfig(backend='sparse')"
-        )
-    if cfg.backend == "sparse" and not is_sparse:
-        raise ValueError(
-            "cfg.backend='sparse' needs a repro.sparse.SparseBlockMatrix "
-            "design matrix (build one with SparseBlockMatrix.from_dense / "
-            "from_coo or repro.data.make_sparse_proxy)"
-        )
+class LassoCo(NamedTuple):
+    """Lasso co-state: the residual and the paper's scalar recursions."""
 
-
-class ColStats(NamedTuple):
-    """Per-column statistics precomputed once before the iterations (§4.2)."""
-
-    zty: jax.Array  # (p,)  z_i^T y
-    znorm2: jax.Array  # (p,)  ||z_i||^2
-    yty: jax.Array  # ()    y^T y
-
-
-class FWState(NamedTuple):
-    """Loop state. ``alpha = scale * beta`` (scaled representation)."""
-
-    beta: jax.Array  # (p,) unscaled coefficients
-    scale: jax.Array  # ()  multiplicative scale
     resid: jax.Array  # (m,) R = y - X alpha
     s_quad: jax.Array  # ()  S^k = ||X alpha||^2
     f_lin: jax.Array  # ()  F^k = (X alpha)^T y
-    maxabs: jax.Array  # ()  running upper bound on ||alpha||_inf
-    step_inf: jax.Array  # ()  ||alpha^{k+1} - alpha^k||_inf (bound)
-    stall: jax.Array  # ()  consecutive sub-tolerance steps
-    n_dots: jax.Array  # ()  length-m dot products consumed so far
-    k: jax.Array  # ()  iteration counter
-    key: jax.Array  # PRNG key
 
 
-class FWResult(NamedTuple):
-    alpha: jax.Array
-    objective: jax.Array
-    iterations: jax.Array
-    n_dots: jax.Array
-    active: jax.Array  # () number of nonzero coefficients
-    converged: jax.Array
+def sf_update(stats, s_quad, f_lin, resid, y, i_star, lam, delta_t, g_lin, k, cfg):
+    """S/F scalar recursions (paper, below eq. 8) + the periodic exact
+    O(m) refresh from the residual (fp32-drift control, DESIGN.md).
 
-
-def precompute_colstats(
-    Xt: jax.Array, y: jax.Array, cfg: Optional[FWConfig] = None
-) -> ColStats:
-    """One full pass over X: z_i^T y and ||z_i||^2 for every column (§4.2).
-
-    With ``cfg.backend == 'pallas'`` the fused single-sweep kernel
-    (repro.kernels.colstats) computes both statistics in one HBM pass.
-    A SparseBlockMatrix sweeps its stored slots only — O(nnz), not O(p*m).
+    Shared by the lasso and elastic-net oracles — the elastic-net layers
+    its Q recursion on top. Returns (s_quad, f_lin, refresh) so callers
+    can refresh their own extra state on the same cadence.
     """
-    if isinstance(Xt, SparseBlockMatrix):
-        zty, znorm2 = sparse_ops.sparse_colstats(Xt, y)
-        return ColStats(zty=zty, znorm2=znorm2, yty=jnp.dot(y, y))
-    if cfg is not None and cfg.backend == "pallas":
-        zty, znorm2 = _colstats_kernel(
-            Xt, y, m_tile=cfg.m_tile, interpret=_use_interpret(cfg)
+    one_m = 1.0 - lam
+    s_quad = (
+        one_m**2 * s_quad
+        + 2.0 * delta_t * lam * one_m * g_lin
+        + delta_t**2 * lam**2 * stats.znorm2[i_star]
+    )
+    f_lin = one_m * f_lin + delta_t * lam * stats.zty[i_star]
+    refresh = (k % cfg.refresh_every) == (cfg.refresh_every - 1)
+    v = y - resid
+    s_quad = jnp.where(refresh, jnp.dot(v, v), s_quad)
+    f_lin = jnp.where(refresh, jnp.dot(v, y), f_lin)
+    return s_quad, f_lin, refresh
+
+
+@dataclasses.dataclass(frozen=True)
+class LassoOracle:
+    """Problem oracle: 1/2 ||X alpha - y||^2 over the l1 ball."""
+
+    needs_stats = True
+    extra_dots = 0
+
+    def init_co(self, y, v, beta, dtype) -> LassoCo:
+        if v is None:
+            return LassoCo(
+                resid=y.astype(dtype),
+                s_quad=jnp.zeros((), dtype),
+                f_lin=jnp.zeros((), dtype),
+            )
+        return LassoCo(resid=y - v, s_quad=jnp.dot(v, v), f_lin=jnp.dot(v, y))
+
+    def cograd(self, co: LassoCo, y):
+        """Sampled scores are -z_i^T R (method of residuals, eq. 7)."""
+        return co.resid
+
+    def score_extra(self, beta, scale):
+        return None
+
+    def line_search(
+        self, Xt, y, stats, co: LassoCo, i_star, g_raw, g_sel, a_star, delta_t, cfg
+    ):
+        """Closed-form exact line search (eq. 8).
+
+        ``num`` is the sampled FW duality gap g_S = alpha^T grad +
+        delta |g*| (exact gap under full sampling). A step whose gap is
+        below the fp32 rounding floor of its own terms cannot make real
+        progress, but its micro step can still exceed ``tol`` through
+        the maxabs-inflated stopping bound — warm starts from a
+        converged iterate would otherwise micro-oscillate for many
+        iterations (``gap_rtol``, DESIGN.md §Stopping).
+        """
+        g_lin = g_raw + stats.zty[i_star]  # G_{i*} = z_{i*}^T (X alpha)
+        num = co.s_quad - delta_t * g_sel - co.f_lin
+        den = co.s_quad - 2.0 * delta_t * g_lin + delta_t**2 * stats.znorm2[i_star]
+        lam = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, 1.0)
+        gap_scale = co.s_quad + jnp.abs(co.f_lin) + jnp.abs(delta_t * g_sel)
+        no_progress = num <= cfg.gap_rtol * gap_scale
+        return lam, no_progress, g_lin
+
+    def update_co(
+        self, Xt, y, stats, co: LassoCo, beta, scale, i_star, a_star, lam,
+        delta_t, k, cfg, aux,
+    ) -> LassoCo:
+        # residual update (eq. 10), backend-dispatched
+        resid = vertex.apply_column_update(Xt, co.resid, y, i_star, lam, delta_t, cfg)
+        s_quad, f_lin, _ = sf_update(
+            stats, co.s_quad, co.f_lin, resid, y, i_star, lam, delta_t,
+            aux, k, cfg,
         )
-    else:
-        zty = Xt @ y
-        znorm2 = jnp.sum(Xt * Xt, axis=1)
-    return ColStats(zty=zty, znorm2=znorm2, yty=jnp.dot(y, y))
+        return LassoCo(resid=resid, s_quad=s_quad, f_lin=f_lin)
+
+    def objective(self, y, stats, co: LassoCo):
+        """f(alpha^k) = 1/2 y^T y + 1/2 S^k - F^k (paper eq. 8 block)."""
+        return 0.5 * stats.yty + 0.5 * co.s_quad - co.f_lin
+
+
+LASSO = LassoOracle()
+
+
+# --------------------------------------------------------------------------
+# Back-compat state surface (tests drive fw_step / init_state directly)
+# --------------------------------------------------------------------------
+
+
+class FWState(NamedTuple):
+    """Flat lasso loop state. ``alpha = scale * beta`` (scaled repr)."""
+
+    beta: jax.Array
+    scale: jax.Array
+    resid: jax.Array
+    s_quad: jax.Array
+    f_lin: jax.Array
+    maxabs: jax.Array
+    step_inf: jax.Array
+    stall: jax.Array
+    n_dots: jax.Array
+    k: jax.Array
+    key: jax.Array
+
+
+def _to_engine(state: FWState) -> EngineState:
+    return EngineState(
+        beta=state.beta,
+        scale=state.scale,
+        co=LassoCo(resid=state.resid, s_quad=state.s_quad, f_lin=state.f_lin),
+        maxabs=state.maxabs,
+        step_inf=state.step_inf,
+        stall=state.stall,
+        n_dots=state.n_dots,
+        k=state.k,
+        key=state.key,
+    )
+
+
+def _from_engine(es: EngineState) -> FWState:
+    return FWState(
+        beta=es.beta,
+        scale=es.scale,
+        resid=es.co.resid,
+        s_quad=es.co.s_quad,
+        f_lin=es.co.f_lin,
+        maxabs=es.maxabs,
+        step_inf=es.step_inf,
+        stall=es.stall,
+        n_dots=es.n_dots,
+        k=es.k,
+        key=es.key,
+    )
 
 
 def init_state(
-    Xt: jax.Array,
+    Xt,
     y: jax.Array,
     key: jax.Array,
     alpha0: Optional[jax.Array] = None,
 ) -> FWState:
     """Start from the null solution, or warm-start from ``alpha0``."""
-    p = Xt.shape[0]
-    if alpha0 is None:
-        beta = jnp.zeros((p,), Xt.dtype)
-        resid = y.astype(Xt.dtype)
-        s_quad = jnp.zeros((), Xt.dtype)
-        f_lin = jnp.zeros((), Xt.dtype)
-        maxabs = jnp.zeros((), Xt.dtype)
-    else:
-        beta = alpha0.astype(Xt.dtype)
-        if isinstance(Xt, SparseBlockMatrix):
-            v = sparse_ops.sparse_matvec(Xt, beta)  # X alpha, O(nnz)
-        else:
-            v = beta @ Xt  # X alpha
-        resid = y - v
-        s_quad = jnp.dot(v, v)
-        f_lin = jnp.dot(v, y)
-        maxabs = jnp.max(jnp.abs(beta))
-    return FWState(
-        beta=beta,
-        scale=jnp.ones((), Xt.dtype),
-        resid=resid,
-        s_quad=s_quad,
-        f_lin=f_lin,
-        maxabs=maxabs,
-        step_inf=jnp.full((), jnp.inf, Xt.dtype),
-        stall=jnp.zeros((), jnp.int32),
-        n_dots=jnp.zeros((), jnp.int32),
-        k=jnp.zeros((), jnp.int32),
-        key=key,
-    )
-
-
-def _sample_block_starts(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
-    """Aligned block starts for 'block' sampling, clamped so the number of
-    requested blocks never exceeds the number of available blocks (choice
-    without replacement would otherwise error for kappa//bs > ceil(p/bs))."""
-    bs = cfg.block_size
-    total = -(-p // bs)  # ceil
-    nblocks = min(max(cfg.kappa // bs, 1), total)
-    return jax.random.choice(key, total, (nblocks,), replace=False).astype(jnp.int32)
-
-
-def _sample_indices(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
-    """Draw the sampling set S (paper §4.1 / §4.5).
-
-    'uniform': kappa i.i.d. uniform draws (with replacement — O(kappa), the
-       large-p-friendly reading of the paper's uniform kappa-subsets).
-    'block':   kappa/block aligned blocks without replacement (TPU-native).
-    'full':    deterministic FW (S = {1..p}).
-    """
-    if cfg.sampling == "full":
-        return jnp.arange(p)
-    if cfg.sampling == "uniform":
-        return jax.random.randint(key, (cfg.kappa,), 0, p)
-    if cfg.sampling == "block":
-        starts = _sample_block_starts(key, p, cfg)
-        idx = starts[:, None] * cfg.block_size + jnp.arange(cfg.block_size)[None, :]
-        return idx.reshape(-1) % p  # tail block wraps (documented in DESIGN.md)
-    raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
-
-
-def _kernel_vertex(
-    Xt: jax.Array, resid: jax.Array, key: jax.Array, p: int, cfg: FWConfig
-):
-    """Sampled FW vertex via the Pallas scalar-prefetch gather kernel.
-
-    'block'/'full' drive block_size-wide aligned bricks; 'uniform' degrades
-    to width-1 blocks (same index stream as the XLA gather path). Returns
-    (i_star, g_star, n_scored). ``Xt`` may carry zero-padded trailing rows
-    (p_valid masks them out of the argmax).
-    """
-    if cfg.sampling == "uniform":
-        # same draw as the XLA path: the backends replay one index stream
-        blk = _sample_indices(key, p, cfg).astype(jnp.int32)
-        bs = 1
-    elif cfg.sampling == "block":
-        blk = _sample_block_starts(key, p, cfg)
-        bs = cfg.block_size
-    elif cfg.sampling == "full":
-        bs = cfg.block_size
-        blk = jnp.arange(-(-p // bs), dtype=jnp.int32)
-    else:
-        raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
-    i_star, g_star = _fw_vertex_kernel(
-        Xt,
-        resid,
-        blk,
-        block_size=bs,
-        m_tile=cfg.m_tile,
-        interpret=_use_interpret(cfg),
-        p_valid=p,
-    )
-    # dot-product accounting parity with the XLA path: 'full' scores every
-    # REAL coordinate once (padded rows are free zeros, not sampled work);
-    # 'block' counts nblocks*bs either way (the XLA path's wrapped tail
-    # duplicates coords just as the kernel path's tail pads them).
-    n_scored = p if cfg.sampling == "full" else blk.shape[0] * bs
-    return i_star, g_star, n_scored
-
-
-def _sample_sparse_blocks(key: jax.Array, mat: SparseBlockMatrix, cfg: FWConfig):
-    """Aligned block starts for the sparse backend. Block geometry comes
-    from the MATRIX (cfg.block_size is a dense-kernel knob); the requested
-    count is clamped to the available blocks like _sample_block_starts."""
-    nblocks = min(max(cfg.kappa // mat.block_size, 1), mat.nblocks)
-    return jax.random.choice(key, mat.nblocks, (nblocks,), replace=False).astype(
-        jnp.int32
-    )
-
-
-def _sparse_vertex(
-    mat: SparseBlockMatrix, resid: jax.Array, key: jax.Array, cfg: FWConfig
-):
-    """Sampled FW vertex over the block-ELL matrix.
-
-    'block'/'full' drive whole aligned blocks (kernel-dispatchable, the
-    tail block is zero-padded at construction — no modulo wrap, so exact
-    Lemma 1 uniformity holds for every p); 'uniform' is a width-1 XLA
-    gather replaying the exact index stream of the dense XLA path.
-    Returns (i_star, g_star, n_scored).
-    """
-    if cfg.sampling == "uniform":
-        idx = _sample_indices(key, mat.p, cfg)
-        i_star, g_star = sparse_ops.sparse_gather_vertex(mat, resid, idx)
-        return i_star, g_star, idx.shape[0]
-    if cfg.sampling == "block":
-        blk = _sample_sparse_blocks(key, mat, cfg)
-        n_scored = blk.shape[0] * mat.block_size
-    elif cfg.sampling == "full":
-        blk = jnp.arange(mat.nblocks, dtype=jnp.int32)
-        n_scored = mat.p
-    else:
-        raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
-    i_star, g_star = sparse_ops.sparse_fw_vertex(
-        mat,
-        resid,
-        blk,
-        use_kernel=_use_sparse_kernel(cfg),
-        interpret=_use_interpret(cfg),
-    )
-    return i_star, g_star, n_scored
+    return _from_engine(engine.init_state(LASSO, Xt, y, key, alpha0))
 
 
 def fw_step(
-    Xt: jax.Array,
+    Xt,
     y: jax.Array,
     stats: ColStats,
     state: FWState,
     cfg: FWConfig,
     delta=None,
 ) -> FWState:
-    """One randomized Frank-Wolfe step (paper Algorithm 2).
-
-    ``delta`` may be a traced array: the l1 radius enters the math only
-    through scalar formulas, so keeping it dynamic lets a whole
-    regularization path reuse ONE compiled solver (§Perf).
-
-    ``Xt`` may be feature-padded (``_pad_features``) when
-    ``cfg.backend == 'pallas'``; all other state stays at the true p,
-    which is read off ``stats``.
-    """
-    p = stats.zty.shape[0]
-    delta = cfg.delta if delta is None else delta
-    key, sub = jax.random.split(state.key)
-
-    # -- step 2: method of residuals on the sampled coordinates (eq. 7) ----
-    if cfg.backend == "sparse":
-        i_star, g_star, n_scored = _sparse_vertex(Xt, state.resid, sub, cfg)
-    elif cfg.backend == "pallas":
-        i_star, g_star, n_scored = _kernel_vertex(Xt, state.resid, sub, p, cfg)
-    else:
-        idx = _sample_indices(sub, p, cfg)
-        rows = jnp.take(Xt, idx, axis=0)  # (|S|, m) contiguous row gather
-        grad_s = -(rows @ state.resid)  # (|S|,)
-        j = jnp.argmax(jnp.abs(grad_s))
-        i_star = idx[j]
-        g_star = grad_s[j]
-        n_scored = idx.shape[0]
-
-    # -- step 3: FW vertex sign (eq. 6) -------------------------------------
-    delta_t = -delta * jnp.sign(g_star)  # delta-tilde
-
-    # -- step 4: closed-form exact line search (eq. 8) ----------------------
-    g_lin = g_star + stats.zty[i_star]  # G_{i*} = z_{i*}^T (X alpha)
-    num = state.s_quad - delta_t * g_star - state.f_lin
-    den = state.s_quad - 2.0 * delta_t * g_lin + delta_t**2 * stats.znorm2[i_star]
-    lam = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, 1.0)
-
-    # -- step 5: coefficient update in scaled representation ---------------
-    one_m = 1.0 - lam
-    alpha_istar_old = state.scale * state.beta[i_star]
-    new_scale = state.scale * one_m
-    # renormalize when the scale underflows (rare O(p) event)
-    need_renorm = new_scale < cfg.renorm_threshold
-    beta, scale = jax.lax.cond(
-        need_renorm,
-        lambda b, s: (b * s, jnp.ones((), Xt.dtype)),
-        lambda b, s: (b, s),
-        state.beta,
-        new_scale,
-    )
-    beta = beta.at[i_star].add(delta_t * lam / jnp.maximum(scale, cfg.eps_den))
-
-    # -- step 6: residual update (eq. 10) -----------------------------------
-    if cfg.backend == "sparse":
-        col_vals, col_rows = sparse_ops.sparse_column(Xt, i_star)
-        resid = sparse_ops.sparse_residual_update(
-            state.resid, y, col_vals, col_rows, lam, delta_t
-        )
-    elif cfg.backend == "pallas":
-        z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
-        resid = _residual_update_kernel(
-            state.resid, y, z_star, lam, delta_t,
-            m_tile=cfg.m_tile, interpret=_use_interpret(cfg),
-        )
-    else:
-        z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
-        resid = one_m * state.resid + lam * (y - delta_t * z_star)
-
-    # -- S/F scalar recursions (paper, below eq. 8) --------------------------
-    s_quad = (
-        one_m**2 * state.s_quad
-        + 2.0 * delta_t * lam * one_m * g_lin
-        + delta_t**2 * lam**2 * stats.znorm2[i_star]
-    )
-    f_lin = one_m * state.f_lin + delta_t * lam * stats.zty[i_star]
-
-    # fp32-drift control: periodically recompute S/F exactly from the
-    # residual (v = y - R), an O(m) refresh — see DESIGN.md.
-    refresh = (state.k % cfg.refresh_every) == (cfg.refresh_every - 1)
-    v = y - resid
-    s_quad = jnp.where(refresh, jnp.dot(v, v), s_quad)
-    f_lin = jnp.where(refresh, jnp.dot(v, y), f_lin)
-
-    # -- stopping statistic: ||alpha_{k+1} - alpha_k||_inf upper bound ------
-    alpha_istar_new = scale * beta[i_star]
-    step_inf = lam * jnp.maximum(state.maxabs, jnp.abs(delta_t - alpha_istar_old))
-    maxabs = jnp.maximum(one_m * state.maxabs, jnp.abs(alpha_istar_new))
-    # ``num`` is the sampled FW duality gap g_S = alpha^T grad + delta |g*|
-    # (exact gap under full sampling). A step whose gap is below the fp32
-    # rounding floor of its own terms cannot make real progress, but its
-    # micro step can still exceed ``tol`` through the maxabs-inflated bound
-    # above — warm starts from a converged iterate would otherwise
-    # micro-oscillate for many iterations (DESIGN.md §Stopping).
-    gap_scale = state.s_quad + jnp.abs(state.f_lin) + jnp.abs(delta_t * g_star)
-    no_progress = num <= cfg.gap_rtol * gap_scale
-    stall = jnp.where((step_inf <= cfg.tol) | no_progress, state.stall + 1, 0)
-
-    return FWState(
-        beta=beta,
-        scale=scale,
-        resid=resid,
-        s_quad=s_quad,
-        f_lin=f_lin,
-        maxabs=maxabs,
-        step_inf=step_inf,
-        stall=stall,
-        n_dots=state.n_dots + n_scored,
-        k=state.k + 1,
-        key=key,
+    """One randomized Frank-Wolfe step (paper Algorithm 2) — the engine
+    step under the lasso oracle. ``Xt`` must already be feature-padded
+    when ``cfg.backend == 'pallas'`` with block sampling (``fw_solve``
+    does this once, outside the hot loop)."""
+    delta = jnp.asarray(cfg.delta if delta is None else delta)
+    return _from_engine(
+        engine.step(LASSO, Xt, y, stats, _to_engine(state), cfg, delta)
     )
 
 
-def objective(stats: ColStats, state: FWState) -> jax.Array:
+def objective(stats: ColStats, state) -> jax.Array:
     """f(alpha^k) = 1/2 y^T y + 1/2 S^k - F^k (paper eq. 8 block)."""
     return 0.5 * stats.yty + 0.5 * state.s_quad - state.f_lin
 
 
-def duality_gap(Xt: jax.Array, state: FWState, delta: float) -> jax.Array:
+def duality_gap(Xt, state, delta: float) -> jax.Array:
     """Exact FW duality gap g(alpha) = alpha^T grad + delta*||grad||_inf.
 
     O(m p) dense, O(nnz) sparse — certification / tests, not the hot loop.
@@ -429,13 +239,8 @@ def duality_gap(Xt: jax.Array, state: FWState, delta: float) -> jax.Array:
     return jnp.dot(alpha, grad) + delta * jnp.max(jnp.abs(grad))
 
 
-def _patience(cfg: FWConfig) -> int:
-    return cfg.patience if cfg.sampling != "full" else 1
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
 def fw_solve(
-    Xt: jax.Array,
+    Xt,
     y: jax.Array,
     cfg: FWConfig,
     key: jax.Array,
@@ -445,63 +250,17 @@ def fw_solve(
     """Run Algorithm 2 until ||alpha_{k+1}-alpha_k||_inf <= tol for
     ``patience`` consecutive iterations, or max_iters. ``delta`` (traced)
     overrides cfg.delta — one compile serves the whole path."""
-    _check_matrix_backend(Xt, cfg)
-    delta = jnp.asarray(cfg.delta if delta is None else delta)
-    stats = precompute_colstats(Xt, y, cfg)
-    state0 = init_state(Xt, y, key, alpha0)
-    patience = _patience(cfg)
-    if cfg.backend == "pallas" and cfg.sampling != "uniform":
-        Xt = _pad_features(Xt, cfg.block_size)  # once, outside the hot loop
-
-    def cond(state: FWState):
-        return (state.k < cfg.max_iters) & (state.stall < patience)
-
-    def body(state: FWState):
-        return fw_step(Xt, y, stats, state, cfg, delta)
-
-    final = jax.lax.while_loop(cond, body, state0)
-    alpha = final.scale * final.beta
-    return FWResult(
-        alpha=alpha,
-        objective=objective(stats, final),
-        iterations=final.k,
-        n_dots=final.n_dots,
-        active=jnp.sum(alpha != 0.0),
-        converged=final.stall >= patience,
-    )
+    return engine.solve(LASSO, Xt, y, cfg, key, alpha0, delta)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n_iters"))
 def fw_solve_with_history(
-    Xt: jax.Array,
+    Xt,
     y: jax.Array,
     cfg: FWConfig,
     key: jax.Array,
     n_iters: int,
     alpha0: Optional[jax.Array] = None,
 ):
-    """Fixed-iteration run recording f(alpha^k) per step (convergence plots).
-
-    Returns (result, objective_history[n_iters]).
-    """
-    _check_matrix_backend(Xt, cfg)
-    stats = precompute_colstats(Xt, y, cfg)
-    state0 = init_state(Xt, y, key, alpha0)
-    if cfg.backend == "pallas" and cfg.sampling != "uniform":
-        Xt = _pad_features(Xt, cfg.block_size)
-
-    def body(state, _):
-        new = fw_step(Xt, y, stats, state, cfg, jnp.asarray(cfg.delta))
-        return new, objective(stats, new)
-
-    final, hist = jax.lax.scan(body, state0, None, length=n_iters)
-    alpha = final.scale * final.beta
-    res = FWResult(
-        alpha=alpha,
-        objective=objective(stats, final),
-        iterations=final.k,
-        n_dots=final.n_dots,
-        active=jnp.sum(alpha != 0.0),
-        converged=final.stall >= _patience(cfg),
-    )
-    return res, hist
+    """Fixed-iteration run recording f(alpha^k) per step (convergence
+    plots). Returns (result, objective_history[n_iters])."""
+    return engine.solve_with_history(LASSO, Xt, y, cfg, key, n_iters, alpha0)

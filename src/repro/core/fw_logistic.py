@@ -1,153 +1,122 @@
-"""Stochastic Frank-Wolfe for l1-constrained logistic regression
-(paper §6: "an extension of the algorithm to solve l1-regularized
-logistic regression problems ... can be easily obtained").
+"""Logistic problem oracle for the stochastic FW engine (paper §6:
+"an extension of the algorithm to solve l1-regularized logistic
+regression problems ... can be easily obtained").
 
     min_a  sum_i log(1 + exp(-y_i * x_i^T a))   s.t.  ||a||_1 <= delta
     (y in {-1, +1})
 
-Mechanics mirror Algorithm 2 with two changes:
+Mechanics mirror Algorithm 2 with two changes, both of which live here
+(everything else — sampling, backend dispatch, stopping, loop drivers —
+is the shared engine, DESIGN.md §Engine):
   * the "residual" becomes the margin vector m = X a, updated by the same
-    O(m) recursion m <- (1-l) m + l dt z_i* (the FW step is linear);
+    O(m) recursion m <- (1-l) m + l dt z_i* (the FW step is linear); the
+    engine's co-gradient is w = -grad_margin, so the sampled linear
+    scores -z_i^T w equal z_i^T grad_margin bitwise;
   * the exact line search has no closed form; phi'(l) is monotone
     (convexity), so a fixed number of bisection steps on phi'(l) = 0
     gives the step size with O(m) work per probe.
+
+Because the oracle rides the engine, the logistic solver now runs on all
+three backends — including ``FWConfig(backend='sparse')`` over a
+``SparseBlockMatrix`` (the bisection direction vector is materialized by
+the margin-scatter op ``sparse.ops.sparse_column_dense``) — and through
+both regularization-path drivers in ``core.path``.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fw_lasso import _sample_indices
+from repro.core import engine, vertex
 from repro.core.solver_config import FWConfig
 
-
-class LogisticState(NamedTuple):
-    beta: jax.Array
-    scale: jax.Array
-    margin: jax.Array  # (m,) X a
-    maxabs: jax.Array
-    step_inf: jax.Array
-    stall: jax.Array
-    n_dots: jax.Array
-    k: jax.Array
-    key: jax.Array
-
-
-class LogisticResult(NamedTuple):
-    alpha: jax.Array
-    objective: jax.Array
-    iterations: jax.Array
-    n_dots: jax.Array
-    active: jax.Array
-    converged: jax.Array
+LogisticResult = engine.SolveResult
 
 
 def _loss(margin, y):
     return jnp.sum(jnp.logaddexp(0.0, -y * margin))
 
 
-def logistic_step(Xt, y, state: LogisticState, cfg: FWConfig, n_bisect: int = 20):
-    p = Xt.shape[0]
-    key, sub = jax.random.split(state.key)
-    idx = _sample_indices(sub, p, cfg)
+class LogisticCo(NamedTuple):
+    """Logistic co-state: just the margin vector X a."""
 
-    # gradient wrt margin: -y * sigmoid(-y * m)
-    gm = -y * jax.nn.sigmoid(-y * state.margin)  # (m,)
-    rows = jnp.take(Xt, idx, axis=0)
-    grad_s = rows @ gm  # sampled gradient coords
-
-    j = jnp.argmax(jnp.abs(grad_s))
-    i_star = idx[j]
-    g_star = grad_s[j]
-    delta_t = -cfg.delta * jnp.sign(g_star)
-
-    z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
-    # margin along the segment: m(l) = (1-l) m + l dt z
-    dm = delta_t * z_star - state.margin  # (m,)
-
-    def phi_prime(lam):
-        mg = state.margin + lam * dm
-        return jnp.dot(-y * jax.nn.sigmoid(-y * mg), dm)
-
-    # bisection on [0, 1]; phi' monotone increasing (convexity)
-    def body(_, ab):
-        a, b = ab
-        mid = 0.5 * (a + b)
-        going_up = phi_prime(mid) > 0
-        return jnp.where(going_up, a, mid), jnp.where(going_up, mid, b)
-
-    # if phi'(1) <= 0 the minimizer is lam=1; if phi'(0) >= 0 it's 0
-    a0 = jnp.zeros(())
-    b0 = jnp.ones(())
-    a, b = jax.lax.fori_loop(0, n_bisect, body, (a0, b0))
-    lam = 0.5 * (a + b)
-    lam = jnp.where(phi_prime(jnp.ones(())) <= 0, 1.0, lam)
-    lam = jnp.where(phi_prime(jnp.zeros(())) >= 0, 0.0, lam)
-
-    one_m = 1.0 - lam
-    alpha_istar_old = state.scale * state.beta[i_star]
-    new_scale = state.scale * one_m
-    need_renorm = new_scale < cfg.renorm_threshold
-    beta, scale = jax.lax.cond(
-        need_renorm,
-        lambda bb, ss: (bb * ss, jnp.ones((), Xt.dtype)),
-        lambda bb, ss: (bb, ss),
-        state.beta,
-        new_scale,
-    )
-    beta = beta.at[i_star].add(delta_t * lam / jnp.maximum(scale, cfg.eps_den))
-    margin = state.margin + lam * dm
-
-    alpha_new = scale * beta[i_star]
-    step_inf = lam * jnp.maximum(state.maxabs, jnp.abs(delta_t - alpha_istar_old))
-    maxabs = jnp.maximum(one_m * state.maxabs, jnp.abs(alpha_new))
-    stall = jnp.where(step_inf <= cfg.tol, state.stall + 1, 0)
-
-    return LogisticState(
-        beta=beta, scale=scale, margin=margin, maxabs=maxabs,
-        step_inf=step_inf, stall=stall,
-        n_dots=state.n_dots + idx.shape[0] + n_bisect + 2,
-        k=state.k + 1, key=key,
-    )
+    margin: jax.Array  # (m,)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@dataclasses.dataclass(frozen=True)
+class LogisticOracle:
+    """Problem oracle: l1-constrained logistic loss (labels in {-1,+1})."""
+
+    n_bisect: int = 20
+
+    needs_stats = False
+
+    @property
+    def extra_dots(self) -> int:
+        # each bisection probe is one O(m) dot, plus the two endpoint tests
+        return self.n_bisect + 2
+
+    def init_co(self, y, v, beta, dtype) -> LogisticCo:
+        return LogisticCo(margin=jnp.zeros_like(y) if v is None else v)
+
+    def cograd(self, co: LogisticCo, y):
+        """gradient wrt margin is -y * sigmoid(-y * m); the engine scores
+        -z_i^T w, so pass w = -grad (negation is IEEE-exact)."""
+        return y * jax.nn.sigmoid(-y * co.margin)
+
+    def score_extra(self, beta, scale):
+        return None
+
+    def line_search(
+        self, Xt, y, stats, co: LogisticCo, i_star, g_raw, g_sel, a_star, delta_t, cfg
+    ):
+        z_star = vertex.column_dense(Xt, i_star, cfg)
+        # margin along the segment: m(l) = (1-l) m + l dt z
+        dm = delta_t * z_star - co.margin  # (m,)
+
+        def phi_prime(lam):
+            mg = co.margin + lam * dm
+            return jnp.dot(-y * jax.nn.sigmoid(-y * mg), dm)
+
+        # bisection on [0, 1]; phi' monotone increasing (convexity)
+        def body(_, ab):
+            a, b = ab
+            mid = 0.5 * (a + b)
+            going_up = phi_prime(mid) > 0
+            return jnp.where(going_up, a, mid), jnp.where(going_up, mid, b)
+
+        # if phi'(1) <= 0 the minimizer is lam=1; if phi'(0) >= 0 it's 0
+        a, b = jax.lax.fori_loop(0, self.n_bisect, body, (jnp.zeros(()), jnp.ones(())))
+        lam = 0.5 * (a + b)
+        lam = jnp.where(phi_prime(jnp.ones(())) <= 0, 1.0, lam)
+        lam = jnp.where(phi_prime(jnp.zeros(())) >= 0, 0.0, lam)
+        return lam, jnp.asarray(False), dm
+
+    def update_co(
+        self, Xt, y, stats, co: LogisticCo, beta, scale, i_star, a_star, lam,
+        delta_t, k, cfg, aux,
+    ) -> LogisticCo:
+        return LogisticCo(margin=co.margin + lam * aux)
+
+    def objective(self, y, stats, co: LogisticCo):
+        return _loss(co.margin, y)
+
+
+LOGISTIC = LogisticOracle()
+
+
 def logistic_solve(
-    Xt: jax.Array,
+    Xt,
     y: jax.Array,  # labels in {-1, +1}
     cfg: FWConfig,
     key: jax.Array,
     alpha0: Optional[jax.Array] = None,
+    delta=None,
 ) -> LogisticResult:
-    p = Xt.shape[0]
-    if alpha0 is None:
-        beta = jnp.zeros((p,), Xt.dtype)
-        margin = jnp.zeros_like(y)
-        maxabs = jnp.zeros((), Xt.dtype)
-    else:
-        beta = alpha0.astype(Xt.dtype)
-        margin = beta @ Xt
-        maxabs = jnp.max(jnp.abs(beta))
-    state0 = LogisticState(
-        beta=beta, scale=jnp.ones((), Xt.dtype), margin=margin, maxabs=maxabs,
-        step_inf=jnp.full((), jnp.inf, Xt.dtype), stall=jnp.zeros((), jnp.int32),
-        n_dots=jnp.zeros((), jnp.int32), k=jnp.zeros((), jnp.int32), key=key,
-    )
-    patience = cfg.patience if cfg.sampling != "full" else 1
+    """l1-constrained logistic FW on any backend ('xla'|'pallas'|'sparse').
 
-    def cond(s):
-        return (s.k < cfg.max_iters) & (s.stall < patience)
-
-    final = jax.lax.while_loop(cond, lambda s: logistic_step(Xt, y, s, cfg), state0)
-    alpha = final.scale * final.beta
-    return LogisticResult(
-        alpha=alpha,
-        objective=_loss(final.margin, y),
-        iterations=final.k,
-        n_dots=final.n_dots,
-        active=jnp.sum(alpha != 0.0),
-        converged=final.stall >= patience,
-    )
+    ``delta`` (traced) overrides cfg.delta — one compile per path."""
+    return engine.solve(LOGISTIC, Xt, y, cfg, key, alpha0, delta)

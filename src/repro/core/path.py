@@ -1,4 +1,4 @@
-"""Regularization-path drivers (paper §5 protocol).
+"""Regularization-path drivers (paper §5 protocol), oracle-generic.
 
 Protocol reproduced from the paper:
   * 100-point grid in log scale;
@@ -12,11 +12,14 @@ Protocol reproduced from the paper:
   * FW warm start uses the paper's rescaling heuristic: the previous
     solution is scaled so its l1 norm equals the next delta (the solution
     is known to lie on the boundary when delta < ||alpha_LS||_1).
+
+Both FW drivers take an optional problem ``oracle`` (DESIGN.md §Engine;
+default lasso), so the same path protocol — including the batched
+multi-delta lane driver with converged-lane pruning — serves the whole
+solver family (lasso / logistic / elastic-net) on every backend.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import time
 from typing import Callable, List, NamedTuple, Optional
 
@@ -24,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, fw_lasso
+from repro.core import baselines, engine, fw_lasso
 from repro.core.solver_config import CDConfig, FISTAConfig, FWConfig
 from repro.sparse import ops as sparse_ops
 from repro.sparse.matrix import SparseBlockMatrix
@@ -32,7 +35,7 @@ from repro.sparse.matrix import SparseBlockMatrix
 
 class PathPoint(NamedTuple):
     reg: float  # lam or delta
-    objective: float  # 1/2 ||X a - y||^2
+    objective: float  # the oracle's objective at this grid point
     l1: float
     active: int
     iterations: int
@@ -47,6 +50,9 @@ class PathResult(NamedTuple):
     total_seconds: float
     total_dots: int
     total_iters: int
+    # lane-iterations pruned by the batched driver's per-lane early exit
+    # (0 for the sequential drivers)
+    saved_iters: int = 0
 
     @property
     def mean_active(self) -> float:
@@ -85,8 +91,14 @@ def fw_path(
     deltas: np.ndarray,
     base_cfg: FWConfig,
     seed: int = 0,
+    oracle=None,
 ) -> PathResult:
-    """Stochastic-FW path with the paper's l1-rescaling warm start."""
+    """Stochastic-FW path with the paper's l1-rescaling warm start.
+
+    ``oracle`` selects the objective (default ``fw_lasso.LASSO``; pass
+    ``fw_logistic.LOGISTIC`` or an ``ENOracle(l2)`` for the extensions).
+    """
+    oracle = fw_lasso.LASSO if oracle is None else oracle
     key = jax.random.PRNGKey(seed)
     alpha = None
     points = []
@@ -101,7 +113,7 @@ def fw_path(
                 alpha = alpha * (float(d) / l1)  # paper's rescaling heuristic
         key, sub = jax.random.split(key)
         t0 = time.perf_counter()
-        res = fw_lasso.fw_solve(Xt, y, cfg, sub, alpha, delta=float(d))
+        res = engine.solve(oracle, Xt, y, cfg, sub, alpha, delta=float(d))
         res.alpha.block_until_ready()
         dt = time.perf_counter() - t0
         alpha = res.alpha
@@ -124,24 +136,13 @@ def fw_path(
     return PathResult(points, time.perf_counter() - t_total, total_dots, total_iters)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _batched_fw_solve(Xt, y, cfg: FWConfig, keys, alpha0s, deltas):
-    """vmapped lane solver: one compiled program serves EVERY chunk of the
-    path (delta, warm start, and key are all traced, batched arguments)."""
-
-    def solve_lane(key, alpha0, d):
-        return fw_lasso.fw_solve(Xt, y, cfg, key, alpha0, delta=d)
-
-    return jax.vmap(solve_lane)(keys, alpha0s, deltas)
-
-
 def batched_solver_cache_size() -> int:
     """Distinct compilations of the batched lane solver (see tests)."""
-    return _batched_fw_solve._cache_size()
+    return engine.solve_batched._cache_size()
 
 
 def clear_batched_solver_cache() -> None:
-    _batched_fw_solve.clear_cache()
+    engine.solve_batched.clear_cache()
 
 
 def fw_path_batched(
@@ -151,17 +152,21 @@ def fw_path_batched(
     base_cfg: FWConfig,
     seed: int = 0,
     lane_width: Optional[int] = None,
+    oracle=None,
 ) -> PathResult:
     """Stochastic-FW path solved in parallel delta lanes (DESIGN.md §Path).
 
     The ascending delta grid is cut into chunks of ``lane_width`` deltas;
-    each chunk is solved by ONE vmapped invocation of the jitted solver, so
+    each chunk is solved by ONE invocation of the batched engine loop, so
     a 100-point grid runs as ~8 batched solves instead of 100 sequential
     ones. Warm start keeps the paper's rescaling heuristic per lane: every
     lane starts from the previous chunk's densest solution scaled so its l1
     norm equals the lane's delta. The final (ragged) chunk is padded by
     repeating the last delta so every chunk shares one compiled program.
+    Lanes that converge early are frozen by the engine's masked update;
+    the skipped lane-iterations are summed into ``PathResult.saved_iters``.
     """
+    oracle = fw_lasso.LASSO if oracle is None else oracle
     deltas = np.asarray(deltas, dtype=np.float64)
     n = len(deltas)
     if lane_width is None:
@@ -177,6 +182,7 @@ def fw_path_batched(
     t_total = time.perf_counter()
     total_dots = 0
     total_iters = 0
+    total_saved = 0
     for c in range(n_chunks):
         chunk = padded[c * lane_width : (c + 1) * lane_width]
         d_arr = jnp.asarray(chunk, Xt.dtype)
@@ -185,14 +191,19 @@ def fw_path_batched(
         alpha0s = carry[None, :] * (d_arr / jnp.maximum(l1, 1e-12))[:, None]
         key, *subs = jax.random.split(key, lane_width + 1)
         t0 = time.perf_counter()
-        res = _batched_fw_solve(
-            Xt, y, base_cfg, jnp.stack(subs), alpha0s, d_arr
+        res, _ = engine.solve_batched(
+            oracle, Xt, y, base_cfg, jnp.stack(subs), alpha0s, d_arr
         )
         res.alpha.block_until_ready()
         dt = time.perf_counter() - t0
         carry = res.alpha[-1]
         alphas = np.asarray(res.alpha)
         real_lanes = min(lane_width, n - c * lane_width)  # ragged final chunk
+        # pruning win for the REAL lanes only: iterations each was spared
+        # while the chunk's while_loop kept running for slower lanes (the
+        # engine's own count would also include the phantom padded lanes)
+        iters = np.asarray(res.iterations)
+        total_saved += int(np.sum(iters.max() - iters[:real_lanes]))
         for i in range(real_lanes):
             g = c * lane_width + i
             idx, val = _sparsify(alphas[i])
@@ -209,7 +220,13 @@ def fw_path_batched(
             )
             total_dots += int(res.n_dots[i])
             total_iters += int(res.iterations[i])
-    return PathResult(points, time.perf_counter() - t_total, total_dots, total_iters)
+    return PathResult(
+        points,
+        time.perf_counter() - t_total,
+        total_dots,
+        total_iters,
+        saved_iters=total_saved,
+    )
 
 
 def _penalized_path(solve_fn, Xt, y, lams, seed: int) -> PathResult:

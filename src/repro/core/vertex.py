@@ -1,0 +1,282 @@
+"""Sampled-vertex dispatch shared by the whole FW solver family.
+
+This module owns everything between "the oracle handed us an (m,)
+co-gradient vector" and "here is the winning FW vertex": drawing the
+sampling set S (paper §4.1/§4.5), scoring the sampled coordinates on the
+selected backend ('xla' | 'pallas' | 'sparse'), and reducing to the
+argmax. It is objective-agnostic: every score is the LINEAR form
+
+    raw_i = -z_i^T w        (w = the oracle's co-gradient vector)
+
+optionally shifted by a per-coordinate additive term ``extra_fn(idx)``
+(the elastic-net's ``+l2 * alpha_i``). The lasso passes ``w = R`` and no
+extra term, which replays the exact op sequence (and index stream) of
+the pre-engine solver — see tests/test_engine.py for the bit-identity
+regression. The logistic oracle passes ``w = -grad_margin`` (negation is
+exact in IEEE, so scores equal ``z_i^T grad_margin`` bitwise).
+
+Also here: the backend-dispatched O(m) column recursions every oracle's
+state update needs (eq. 10 and its margin analogue), and the dense
+column accessor the logistic bisection line search uses.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solver_config import FWConfig
+from repro.kernels.fw_grad.fw_grad import sampled_scores as _sampled_scores_kernel
+from repro.kernels.fw_grad.ops import fw_vertex as _fw_vertex_kernel
+from repro.kernels.padding import pad_rows as _pad_features
+from repro.kernels.residual_update.residual_update import (
+    residual_update as _residual_update_kernel,
+)
+from repro.sparse import ops as sparse_ops
+from repro.sparse.matrix import SparseBlockMatrix
+
+ExtraFn = Callable[[jax.Array], jax.Array]
+
+
+def use_interpret(cfg: FWConfig) -> bool:
+    """Pallas kernels compile natively on TPU, interpret everywhere else."""
+    if cfg.interpret is not None:
+        return cfg.interpret
+    return jax.default_backend() != "tpu"
+
+
+def use_sparse_kernel(cfg: FWConfig) -> bool:
+    """'sparse' backend: Pallas prefetch kernel on TPU, XLA gather elsewhere
+    (the XLA path is the production CPU path, not a test stub)."""
+    if cfg.sparse_kernel is not None:
+        return cfg.sparse_kernel
+    return jax.default_backend() == "tpu"
+
+
+def check_matrix_backend(Xt, cfg: FWConfig) -> None:
+    """Trace-time guard: the matrix layout and the backend must agree."""
+    is_sparse = isinstance(Xt, SparseBlockMatrix)
+    if is_sparse and cfg.backend != "sparse":
+        raise ValueError(
+            f"Xt is a SparseBlockMatrix but cfg.backend={cfg.backend!r}; "
+            "use FWConfig(backend='sparse')"
+        )
+    if cfg.backend == "sparse" and not is_sparse:
+        raise ValueError(
+            "cfg.backend='sparse' needs a repro.sparse.SparseBlockMatrix "
+            "design matrix (build one with SparseBlockMatrix.from_dense / "
+            "from_coo or repro.data.make_sparse_proxy)"
+        )
+
+
+def pad_backend_matrix(Xt, cfg: FWConfig):
+    """Zero-pad trailing feature rows for the dense kernel grids — once per
+    solve, OUTSIDE the hot loop (DESIGN.md §Padding). No-op for the other
+    backends ('sparse' pads at construction, 'xla' wraps modulo p)."""
+    if cfg.backend == "pallas" and cfg.sampling != "uniform":
+        return _pad_features(Xt, cfg.block_size)
+    return Xt
+
+
+# --------------------------------------------------------------------------
+# Sampling-set draws (paper §4.1 / §4.5)
+# --------------------------------------------------------------------------
+
+
+def sample_block_starts(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
+    """Aligned block starts for 'block' sampling, clamped so the number of
+    requested blocks never exceeds the number of available blocks (choice
+    without replacement would otherwise error for kappa//bs > ceil(p/bs))."""
+    bs = cfg.block_size
+    total = -(-p // bs)  # ceil
+    nblocks = min(max(cfg.kappa // bs, 1), total)
+    return jax.random.choice(key, total, (nblocks,), replace=False).astype(jnp.int32)
+
+
+def sample_indices(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
+    """Draw the sampling set S (paper §4.1 / §4.5).
+
+    'uniform': kappa i.i.d. uniform draws (with replacement — O(kappa), the
+       large-p-friendly reading of the paper's uniform kappa-subsets).
+    'block':   kappa/block aligned blocks without replacement (TPU-native).
+    'full':    deterministic FW (S = {1..p}).
+    """
+    if cfg.sampling == "full":
+        return jnp.arange(p)
+    if cfg.sampling == "uniform":
+        return jax.random.randint(key, (cfg.kappa,), 0, p)
+    if cfg.sampling == "block":
+        starts = sample_block_starts(key, p, cfg)
+        idx = starts[:, None] * cfg.block_size + jnp.arange(cfg.block_size)[None, :]
+        return idx.reshape(-1) % p  # tail block wraps (documented in DESIGN.md)
+    raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
+
+
+def sample_sparse_blocks(key: jax.Array, mat: SparseBlockMatrix, cfg: FWConfig):
+    """Aligned block starts for the sparse backend. Block geometry comes
+    from the MATRIX (cfg.block_size is a dense-kernel knob); the requested
+    count is clamped to the available blocks like sample_block_starts."""
+    nblocks = min(max(cfg.kappa // mat.block_size, 1), mat.nblocks)
+    return jax.random.choice(key, mat.nblocks, (nblocks,), replace=False).astype(
+        jnp.int32
+    )
+
+
+# --------------------------------------------------------------------------
+# Backend-dispatched vertex selection
+# --------------------------------------------------------------------------
+
+
+def _xla_vertex(Xt, w, key, p, cfg, extra_fn):
+    idx = sample_indices(key, p, cfg)
+    rows = jnp.take(Xt, idx, axis=0)  # (|S|, m) contiguous row gather
+    raw = -(rows @ w)  # (|S|,) linear scores
+    sel = raw if extra_fn is None else raw + extra_fn(idx)
+    j = jnp.argmax(jnp.abs(sel))
+    return idx[j], raw[j], sel[j], idx.shape[0]
+
+
+def _kernel_vertex(Xt, w, key, p, cfg, extra_fn):
+    """Sampled FW vertex via the Pallas scalar-prefetch gather kernel.
+
+    'block'/'full' drive block_size-wide aligned bricks; 'uniform' degrades
+    to width-1 blocks (same index stream as the XLA gather path). ``Xt``
+    may carry zero-padded trailing rows (indices >= p are masked out of
+    the argmax). Without an extra term the fused kernel argmax runs; with
+    one, the per-coordinate scores come back and the shift + argmax run
+    in XLA (the kernel reduction cannot see the extra term).
+    """
+    if cfg.sampling == "uniform":
+        # same draw as the XLA path: the backends replay one index stream
+        blk = sample_indices(key, p, cfg).astype(jnp.int32)
+        bs = 1
+    elif cfg.sampling == "block":
+        blk = sample_block_starts(key, p, cfg)
+        bs = cfg.block_size
+    elif cfg.sampling == "full":
+        bs = cfg.block_size
+        blk = jnp.arange(-(-p // bs), dtype=jnp.int32)
+    else:
+        raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
+    # dot-product accounting parity with the XLA path: 'full' scores every
+    # REAL coordinate once (padded rows are free zeros, not sampled work);
+    # 'block' counts nblocks*bs either way (the XLA path's wrapped tail
+    # duplicates coords just as the kernel path's tail pads them).
+    n_scored = p if cfg.sampling == "full" else blk.shape[0] * bs
+    if extra_fn is None:
+        i_star, g_star = _fw_vertex_kernel(
+            Xt,
+            w,
+            blk,
+            block_size=bs,
+            m_tile=cfg.m_tile,
+            interpret=use_interpret(cfg),
+            p_valid=p,
+        )
+        return i_star, g_star, g_star, n_scored
+    raw = _sampled_scores_kernel(
+        Xt, w, blk, block_size=bs, m_tile=cfg.m_tile, interpret=use_interpret(cfg)
+    )
+    idx = (blk[:, None] * bs + jnp.arange(bs)[None, :]).reshape(-1)
+    sel = raw + extra_fn(idx)
+    mag = jnp.where(idx < p, jnp.abs(sel), -1.0)
+    j = jnp.argmax(mag)
+    return idx[j], raw[j], sel[j], n_scored
+
+
+def _sparse_vertex(mat: SparseBlockMatrix, w, key, cfg, extra_fn):
+    """Sampled FW vertex over the block-ELL matrix.
+
+    'block'/'full' drive whole aligned blocks (kernel-dispatchable, the
+    tail block is zero-padded at construction — no modulo wrap, so exact
+    Lemma 1 uniformity holds for every p); 'uniform' is a width-1 XLA
+    gather replaying the exact index stream of the dense XLA path.
+    """
+    if cfg.sampling == "uniform":
+        idx = sample_indices(key, mat.p, cfg)
+        i_star, g_raw, g_sel = sparse_ops.sparse_gather_vertex_general(
+            mat, w, idx, extra_fn=extra_fn
+        )
+        return i_star, g_raw, g_sel, idx.shape[0]
+    if cfg.sampling == "block":
+        blk = sample_sparse_blocks(key, mat, cfg)
+        n_scored = blk.shape[0] * mat.block_size
+    elif cfg.sampling == "full":
+        blk = jnp.arange(mat.nblocks, dtype=jnp.int32)
+        n_scored = mat.p
+    else:
+        raise ValueError(f"unknown sampling mode {cfg.sampling!r}")
+    i_star, g_raw, g_sel = sparse_ops.sparse_fw_vertex_general(
+        mat,
+        w,
+        blk,
+        use_kernel=use_sparse_kernel(cfg),
+        interpret=use_interpret(cfg),
+        extra_fn=extra_fn,
+    )
+    return i_star, g_raw, g_sel, n_scored
+
+
+def sample_vertex(
+    Xt,
+    w: jax.Array,
+    key: jax.Array,
+    p: int,
+    cfg: FWConfig,
+    extra_fn: Optional[ExtraFn] = None,
+):
+    """Draw S and return the winning vertex on the configured backend.
+
+    Returns ``(i_star, g_raw, g_sel, n_scored)``: the selected global
+    coordinate, its LINEAR score ``-z^T w``, its selected (extra-shifted)
+    score, and how many length-m dot products were consumed. With
+    ``extra_fn is None`` the two scores are the same array.
+    """
+    if cfg.backend == "sparse":
+        return _sparse_vertex(Xt, w, key, cfg, extra_fn)
+    if cfg.backend == "pallas":
+        return _kernel_vertex(Xt, w, key, p, cfg, extra_fn)
+    return _xla_vertex(Xt, w, key, p, cfg, extra_fn)
+
+
+# --------------------------------------------------------------------------
+# Backend-dispatched O(m) column recursions
+# --------------------------------------------------------------------------
+
+
+def apply_column_update(Xt, v, y_vec, i_star, lam, delta_t, cfg: FWConfig):
+    """v <- (1-lam) v + lam (y_vec - delta_t * z_star), backend-dispatched.
+
+    This is eq. 10 with ``v = R, y_vec = y``; with ``v = margin,
+    y_vec = 0, delta_t -> -delta_t`` it is the logistic margin recursion
+    m <- (1-lam) m + lam delta_t z_star.
+    """
+    if cfg.backend == "sparse":
+        col_vals, col_rows = sparse_ops.sparse_column(Xt, i_star)
+        return sparse_ops.sparse_residual_update(
+            v, y_vec, col_vals, col_rows, lam, delta_t
+        )
+    z_star = jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
+    if cfg.backend == "pallas":
+        return _residual_update_kernel(
+            v, y_vec, z_star, lam, delta_t,
+            m_tile=cfg.m_tile, interpret=use_interpret(cfg),
+        )
+    return (1.0 - lam) * v + lam * (y_vec - delta_t * z_star)
+
+
+def column_dense(Xt, i_star, cfg: FWConfig) -> jax.Array:
+    """Dense (m,) column z_star — the logistic bisection needs the whole
+    direction vector. Sparse backend scatters the ELL slots (O(nnz_max) +
+    one O(m) zeros init, amortized against the O(m) bisection probes)."""
+    if cfg.backend == "sparse":
+        return sparse_ops.sparse_column_dense(Xt, i_star)
+    return jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
+
+
+def matvec(Xt, beta: jax.Array) -> jax.Array:
+    """X @ alpha for warm-start initialization, either matrix layout."""
+    if isinstance(Xt, SparseBlockMatrix):
+        return sparse_ops.sparse_matvec(Xt, beta)
+    return beta @ Xt

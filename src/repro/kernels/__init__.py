@@ -5,12 +5,14 @@ fw_grad:          sampled column-block scores (scalar-prefetch gather)
 residual_update:  fused R <- (1-lam) R + lam (y - dt z)
 colstats:         fused z^T y and ||z||^2 setup pass
 sparse_grad:      sampled block-ELL scores (sparse twin of fw_grad)
+sparse_colstats:  fused sparse z^T y and ||z||^2 (sparse twin of colstats)
 """
 from repro.kernels.fw_grad.ops import fw_vertex
 from repro.kernels.fw_grad.fw_grad import sampled_scores
 from repro.kernels.residual_update.residual_update import residual_update
 from repro.kernels.colstats.colstats import colstats
 from repro.kernels.sparse_grad.sparse_grad import sparse_sampled_scores
+from repro.kernels.sparse_colstats.sparse_colstats import sparse_colstats_fused
 
 __all__ = [
     "fw_vertex",
@@ -18,4 +20,5 @@ __all__ = [
     "residual_update",
     "colstats",
     "sparse_sampled_scores",
+    "sparse_colstats_fused",
 ]

@@ -1,0 +1,302 @@
+"""Engine refactor coverage (ISSUE 3 tentpole).
+
+Four layers, none requiring hypothesis (these run in the minimal CI
+image):
+  * trajectory regression: the engine replays the PRE-refactor solvers'
+    uniform-sampling runs exactly — goldens (selected coordinates,
+    iteration/dot counts, objectives) were captured from the monolithic
+    fw_lasso/fw_logistic/fw_elasticnet loops at the commit before the
+    engine existed;
+  * solver-family sparse-vs-dense parity: logistic and elastic-net on
+    ``backend='sparse'`` replay the dense-XLA index stream (mirroring
+    test_backend_parity for the lasso);
+  * batched-vs-sequential path equivalence with converged-lane pruning
+    on, for the lasso AND the extension oracles;
+  * structural acceptance: the three solver modules define oracles only —
+    no while_loop / sampling code of their own.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ENOracle,
+    FWConfig,
+    LOGISTIC,
+    engine,
+    fw_solve,
+    path as path_lib,
+)
+from repro.core.fw_elasticnet import en_solve
+from repro.core.fw_logistic import logistic_solve
+from repro.sparse import ops as sops
+from repro.sparse.matrix import SparseBlockMatrix
+
+DELTA = 150.0
+
+
+def _sparsified(Xt, threshold=0.7, block_size=64):
+    Xs = np.asarray(Xt).copy()
+    Xs[np.abs(Xs) < threshold] = 0.0
+    return jnp.asarray(Xs), SparseBlockMatrix.from_dense(Xs, block_size=block_size)
+
+
+def _logistic_data(m=120, p=80, seed=0, sparse_threshold=None):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((m, p)).astype(np.float32)
+    if sparse_threshold is not None:
+        X[np.abs(X) < sparse_threshold] = 0.0
+    w = np.zeros(p, np.float32)
+    w[:5] = rng.standard_normal(5) * 2
+    y = np.sign(X @ w + 0.1 * rng.standard_normal(m)).astype(np.float32)
+    y[y == 0] = 1.0
+    return jnp.asarray(X.T.copy()), jnp.asarray(y)
+
+
+class TestPreRefactorGoldens:
+    """The engine must replay the pre-refactor trajectories exactly.
+
+    Golden values captured from the monolithic solver loops (commit
+    faae249, PYTHONPATH=src on the CI CPU image) immediately before the
+    engine extraction. Integer trajectory facts (iterations, dot counts,
+    selected support) are asserted exactly — any deviation in the index
+    stream, argmax, or stopping rule changes them; float objectives use
+    a 1e-6 relative tolerance to stay robust to BLAS build differences.
+    """
+
+    def test_lasso_uniform_fixed_iterations(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=DELTA, sampling="uniform", kappa=60,
+                       max_iters=300, tol=0.0, patience=10**9)
+        res = fw_solve(Xt, y, cfg, rng_key)
+        assert int(res.iterations) == 300
+        assert int(res.n_dots) == 18000
+        a = np.asarray(res.alpha)
+        assert np.nonzero(a)[0].tolist() == [70, 272]
+        np.testing.assert_allclose(float(res.objective), 751729.4375, rtol=1e-6)
+        np.testing.assert_allclose(
+            a[[70, 272]], [98.52871704101562, 51.47127914428711], rtol=1e-6
+        )
+
+    def test_lasso_uniform_converging_run(self, small_problem, rng_key):
+        cfg = FWConfig(delta=DELTA, sampling="uniform", kappa=60,
+                       max_iters=5000, tol=1e-4)
+        Xt, y, _ = small_problem
+        res = fw_solve(Xt, y, cfg, rng_key)
+        assert int(res.iterations) == 25
+        assert int(res.n_dots) == 1500
+        assert bool(res.converged)
+        np.testing.assert_allclose(float(res.objective), 751729.4375, rtol=1e-6)
+
+    def test_lasso_sparse_backend_golden(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        mat = SparseBlockMatrix.from_dense(np.asarray(Xt), block_size=64)
+        cfg = FWConfig(delta=DELTA, sampling="uniform", kappa=60,
+                       max_iters=300, tol=0.0, patience=10**9, backend="sparse")
+        res = fw_solve(mat, y, cfg, rng_key)
+        assert int(res.iterations) == 300
+        np.testing.assert_allclose(float(res.objective), 751729.375, rtol=1e-6)
+
+    def test_logistic_uniform_golden(self, rng_key):
+        Xt, y = _logistic_data()
+        cfg = FWConfig(delta=20.0, sampling="uniform", kappa=40,
+                       max_iters=500, tol=0.0, patience=10**9)
+        res = logistic_solve(Xt, y, cfg, rng_key)
+        assert int(res.iterations) == 500
+        assert int(res.n_dots) == 31000  # 40 sampled + 20 bisect + 2 per step
+        assert int(res.active) == 37
+        np.testing.assert_allclose(float(res.objective), 3.0054101943969727, rtol=1e-6)
+
+    def test_elasticnet_uniform_golden(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=30.0, sampling="uniform", kappa=60,
+                       max_iters=800, tol=0.0, patience=10**9)
+        res = en_solve(Xt, y, cfg, 1.0, rng_key)
+        assert int(res.iterations) == 800
+        assert int(res.n_dots) == 48000
+        assert int(res.active) == 2
+        np.testing.assert_allclose(float(res.objective), 828006.375, rtol=1e-6)
+
+
+class TestSolverFamilySparseParity:
+    """logistic_solve / en_solve accept a SparseBlockMatrix with
+    FWConfig(backend='sparse') and agree with their dense-XLA results
+    ('uniform' replays the same index stream, so runs are comparable
+    step for step)."""
+
+    def test_elasticnet_sparse_matches_dense(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        Xd, mat = _sparsified(Xt)
+        base = dict(delta=30.0, sampling="uniform", kappa=60,
+                    max_iters=2000, tol=1e-5)
+        res_d = en_solve(Xd, y, FWConfig(**base), 1.0, rng_key)
+        res_s = en_solve(mat, y, FWConfig(backend="sparse", **base), 1.0, rng_key)
+        assert int(res_s.iterations) == int(res_d.iterations)
+        rel = abs(float(res_s.objective) - float(res_d.objective)) / abs(
+            float(res_d.objective)
+        )
+        assert rel < 1e-4
+        assert float(jnp.sum(jnp.abs(res_s.alpha))) <= 30.0 * (1 + 1e-4)
+
+    def test_logistic_sparse_matches_dense(self, rng_key):
+        Xt, y = _logistic_data(sparse_threshold=0.7)
+        mat = SparseBlockMatrix.from_dense(np.asarray(Xt), block_size=32)
+        base = dict(delta=20.0, sampling="uniform", kappa=40,
+                    max_iters=1500, tol=1e-6)
+        res_d = logistic_solve(Xt, y, FWConfig(**base), rng_key)
+        res_s = logistic_solve(mat, y, FWConfig(backend="sparse", **base), rng_key)
+        rel = abs(float(res_s.objective) - float(res_d.objective)) / max(
+            abs(float(res_d.objective)), 1e-9
+        )
+        assert rel < 1e-3
+        assert float(jnp.sum(jnp.abs(res_s.alpha))) <= 20.0 * (1 + 1e-4)
+
+    def test_logistic_sparse_block_sampling_converges(self, rng_key):
+        """Block mode drives whole aligned ELL blocks (kernel-dispatchable)."""
+        Xt, y = _logistic_data(sparse_threshold=0.7)
+        mat = SparseBlockMatrix.from_dense(np.asarray(Xt), block_size=32)
+        cfg = FWConfig(delta=20.0, sampling="block", kappa=64,
+                       max_iters=2000, tol=1e-6, backend="sparse")
+        res = logistic_solve(mat, y, cfg, rng_key)
+        chance = y.shape[0] * np.log(2.0)
+        assert float(res.objective) < 0.5 * chance
+
+    def test_elasticnet_pallas_matches_xla(self, small_problem, rng_key):
+        """The extra-term (+l2*a) score path through the Pallas sampled-
+        scores kernel agrees with the XLA gather."""
+        Xt, y, _ = small_problem
+        base = dict(delta=30.0, sampling="block", kappa=64, block_size=32,
+                    max_iters=2000, tol=1e-5)
+        res_x = en_solve(Xt, y, FWConfig(**base), 1.0, rng_key)
+        res_p = en_solve(Xt, y, FWConfig(backend="pallas", **base), 1.0, rng_key)
+        rel = abs(float(res_p.objective) - float(res_x.objective)) / abs(
+            float(res_x.objective)
+        )
+        assert rel < 1e-4
+
+    def test_logistic_pallas_matches_xla(self, rng_key):
+        """'uniform' replays the XLA index stream through the width-1
+        kernel path; 'full' is deterministic modulo tail padding."""
+        Xt, y = _logistic_data(p=300)
+        for sampling, kw, tol in (
+            ("uniform", dict(kappa=40), 1e-6),
+            ("full", dict(block_size=128), 1e-4),
+        ):
+            base = dict(delta=10.0, sampling=sampling, max_iters=800,
+                        tol=1e-6, **kw)
+            res_x = logistic_solve(Xt, y, FWConfig(**base), rng_key)
+            res_p = logistic_solve(Xt, y, FWConfig(backend="pallas", **base),
+                                   rng_key)
+            rel = abs(float(res_p.objective) - float(res_x.objective)) / max(
+                abs(float(res_x.objective)), 1e-9
+            )
+            assert rel < tol, (sampling, rel)
+
+    def test_logistic_delta_override_traced(self, rng_key):
+        """One compiled logistic solver serves multiple deltas."""
+        Xt, y = _logistic_data()
+        cfg = FWConfig(delta=1.0, sampling="uniform", kappa=40,
+                       max_iters=500, tol=1e-5)
+        objs = [
+            float(logistic_solve(Xt, y, cfg, rng_key, delta=d).objective)
+            for d in (2.0, 8.0, 20.0)
+        ]
+        assert objs[0] >= objs[1] >= objs[2]  # larger budget, lower loss
+
+
+class TestSparseColstatsKernel:
+    def test_fused_kernel_matches_xla_sweep(self, rng_key):
+        rng = np.random.default_rng(3)
+        Xs = rng.standard_normal((130, 70)).astype(np.float32)  # p not | bs
+        Xs[np.abs(Xs) < 1.0] = 0.0
+        mat = SparseBlockMatrix.from_dense(Xs, block_size=32)
+        y = jnp.asarray(rng.standard_normal(70).astype(np.float32))
+        zty_k, zn2_k = sops.sparse_colstats(mat, y, use_kernel=True, interpret=True)
+        zty_r, zn2_r = sops.sparse_colstats(mat, y)
+        assert zty_k.shape == (130,) and zn2_k.shape == (130,)
+        np.testing.assert_allclose(np.asarray(zty_k), np.asarray(zty_r),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(zn2_k), np.asarray(zn2_r),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_solver_end_to_end_with_kernel_colstats(self, small_problem, rng_key):
+        """sparse_kernel=True routes BOTH the gradient and the colstats
+        through the Pallas twins (interpret off-TPU)."""
+        Xt, y, _ = small_problem
+        _, mat = _sparsified(Xt)
+        cfg = FWConfig(delta=DELTA, sampling="block", kappa=128,
+                       max_iters=2000, tol=1e-5, backend="sparse",
+                       sparse_kernel=True, interpret=True)
+        ref = FWConfig(delta=DELTA, sampling="block", kappa=128,
+                       max_iters=2000, tol=1e-5, backend="sparse",
+                       sparse_kernel=False)
+        res_k = fw_solve(mat, y, cfg, rng_key)
+        res_r = fw_solve(mat, y, ref, rng_key)
+        rel = abs(float(res_k.objective) - float(res_r.objective)) / abs(
+            float(res_r.objective)
+        )
+        assert rel < 1e-4
+
+
+class TestBatchedPathPruning:
+    def test_lasso_batched_matches_sequential_with_pruning(self, small_problem):
+        Xt, y, _ = small_problem
+        deltas = path_lib.delta_grid(100.0, n_points=8)
+        cfg = FWConfig(delta=1.0, kappa=60, max_iters=20000, tol=1e-4)
+        seq = path_lib.fw_path(Xt, y, deltas, cfg)
+        bat = path_lib.fw_path_batched(Xt, y, deltas, cfg, lane_width=4)
+        assert seq.saved_iters == 0  # sequential driver never prunes
+        # lanes converge at different iterations, so pruning must fire
+        assert bat.saved_iters > 0
+        for s, b in zip(seq.points, bat.points):
+            rel = abs(b.objective - s.objective) / abs(s.objective)
+            assert rel < 1e-3, (s.reg, rel)
+
+    def test_elasticnet_batched_matches_sequential(self, small_problem):
+        Xt, y, _ = small_problem
+        oracle = ENOracle(l2=1.0)
+        deltas = np.geomspace(3.0, 30.0, 6)
+        cfg = FWConfig(delta=1.0, sampling="uniform", kappa=60,
+                       max_iters=5000, tol=1e-5)
+        seq = path_lib.fw_path(Xt, y, deltas, cfg, oracle=oracle)
+        bat = path_lib.fw_path_batched(Xt, y, deltas, cfg, lane_width=3,
+                                       oracle=oracle)
+        for s, b in zip(seq.points, bat.points):
+            rel = abs(b.objective - s.objective) / max(abs(s.objective), 1e-9)
+            assert rel < 1e-3, (s.reg, rel)
+        assert bat.saved_iters >= 0
+
+    def test_logistic_path_objective_monotone(self, rng_key):
+        Xt, y = _logistic_data()
+        cfg = FWConfig(delta=1.0, sampling="uniform", kappa=40,
+                       max_iters=1500, tol=1e-6)
+        deltas = np.geomspace(1.0, 20.0, 4)
+        res = path_lib.fw_path(Xt, y, deltas, cfg, oracle=LOGISTIC)
+        objs = [pt.objective for pt in res.points]
+        assert objs == sorted(objs, reverse=True)  # loss falls as delta grows
+
+
+class TestEngineStructure:
+    """Acceptance: ONE hot loop — the solver modules define oracles only."""
+
+    @pytest.mark.parametrize(
+        "module", ["fw_lasso", "fw_logistic", "fw_elasticnet"]
+    )
+    def test_solver_modules_have_no_loop_or_sampling(self, module):
+        import importlib
+
+        src = inspect.getsource(importlib.import_module(f"repro.core.{module}"))
+        assert "while_loop" not in src
+        assert "random.randint" not in src and "random.choice" not in src
+
+    def test_one_shared_engine_loop(self):
+        src = inspect.getsource(engine)
+        assert src.count("jax.lax.while_loop") == 2  # solve + solve_batched
+
+    def test_oracles_are_static_jit_keys(self):
+        assert hash(ENOracle(l2=0.5)) == hash(ENOracle(l2=0.5))
+        assert ENOracle(l2=0.5) == ENOracle(l2=0.5)
+        assert ENOracle(l2=0.5) != ENOracle(l2=1.0)

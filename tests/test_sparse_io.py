@@ -215,3 +215,88 @@ class TestProxyGuard:
         nz = np.asarray(zn2) > 0
         np.testing.assert_allclose(np.asarray(zn2)[nz], 1.0, rtol=1e-4)
         assert abs(float(ds.y.mean())) < 1e-4
+
+
+class TestFetchLibsvm:
+    """scripts/fetch_libsvm.py conversion + verification path, exercised
+    against a local file:// "download" (no network in CI)."""
+
+    def _serve_bz2(self, tmp_path, data):
+        import bz2
+
+        svm = tmp_path / "local.svm"
+        sio.save_svmlight(svm, data, zero_based=False)
+        packed = tmp_path / "local.svm.bz2"
+        packed.write_bytes(bz2.compress(svm.read_bytes()))
+        return f"file://{packed}"
+
+    def _load_script(self):
+        import importlib.util, pathlib
+
+        root = pathlib.Path(__file__).resolve().parents[1]
+        spec = importlib.util.spec_from_file_location(
+            "fetch_libsvm", root / "scripts" / "fetch_libsvm.py"
+        )
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+    def test_fetch_converts_and_verifies(self, tmp_path, monkeypatch):
+        mod = self._load_script()
+        data = _coo(seed=3, m=40, p=90)
+        url = self._serve_bz2(tmp_path, data)
+        monkeypatch.setitem(mod.DATASETS, "e2006-tfidf", (url, data.shape))
+        out = tmp_path / "shards"
+        shard_dir = mod.fetch_one("e2006-tfidf", str(out), 16, timeout=5.0)
+        manifest = sio.read_manifest(shard_dir)
+        assert (manifest["m"], manifest["p"]) == data.shape
+        mat, y = sio.load_shards_as_matrix(shard_dir)
+        np.testing.assert_allclose(np.asarray(y), data.y, rtol=1e-6)
+        got = np.asarray(mat.to_dense())  # feature-major (p, m)
+        want = np.zeros(data.shape, np.float32)
+        want[data.rows, data.cols] = data.vals
+        np.testing.assert_allclose(got, want.T, rtol=1e-6)
+        # idempotent: a second call reuses the manifest
+        assert mod.fetch_one("e2006-tfidf", str(out), 16, timeout=5.0) == shard_dir
+
+    def test_fetch_shape_mismatch_removes_shards(self, tmp_path, monkeypatch):
+        mod = self._load_script()
+        data = _coo(seed=4, m=40, p=90)
+        url = self._serve_bz2(tmp_path, data)
+        out = tmp_path / "shards"
+        # wrong sample count: must refuse the shards
+        monkeypatch.setitem(mod.DATASETS, "e2006-tfidf", (url, (41, 90)))
+        with pytest.raises(RuntimeError, match="published"):
+            mod.fetch_one("e2006-tfidf", str(out), 16, timeout=5.0)
+        assert not (out / "e2006-tfidf" / "manifest.json").exists()
+        # published p SMALLER than the file's max feature index: the
+        # converter itself refuses (indices out of the stated range)
+        monkeypatch.setitem(mod.DATASETS, "e2006-tfidf", (url, (40, 50)))
+        with pytest.raises(ValueError):
+            mod.fetch_one("e2006-tfidf", str(out), 16, timeout=5.0)
+        assert not (out / "e2006-tfidf" / "manifest.json").exists()
+        # published p LARGER is benign: trailing features absent from the
+        # training split are padded to the published width
+        monkeypatch.setitem(mod.DATASETS, "e2006-tfidf", (url, (40, 95)))
+        shard_dir = mod.fetch_one("e2006-tfidf", str(out), 16, timeout=5.0)
+        assert sio.read_manifest(shard_dir)["p"] == 95
+
+    def test_benchmarks_prefer_real_shards(self, tmp_path, monkeypatch):
+        """benchmarks/common.load_sparse_dataset picks up converted shards
+        from $REPRO_DATA_DIR and falls back to the proxy otherwise."""
+        import sys, pathlib
+
+        root = pathlib.Path(__file__).resolve().parents[1]
+        monkeypatch.syspath_prepend(str(root))
+        data = _coo(seed=5, m=40, p=90)
+        shard_dir = tmp_path / "e2006-tfidf"
+        sio.write_shards(shard_dir, data, rows_per_shard=16)
+        import benchmarks.common as common
+
+        monkeypatch.setattr(common, "REPRO_DATA_DIR", str(tmp_path))
+        mat, y, ds = common.load_sparse_dataset("e2006-tfidf")
+        assert ds.name.endswith("-real") and ds.coef is None
+        assert mat.shape == (90, 40)
+        assert abs(float(np.asarray(y).mean())) < 1e-6  # centered targets
+        mat2, _, ds2 = common.load_sparse_dataset("e2006-tfidf", prefer_real=False)
+        assert ds2.coef is not None  # proxy still available on demand
