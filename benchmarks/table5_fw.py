@@ -98,6 +98,7 @@ def run(csv: CSV, datasets=None):
 
     _run_sparse_section(csv, js)
     _run_family_section(csv, js)
+    _run_distributed_section(csv, js)
     js.write()
 
 
@@ -220,6 +221,92 @@ def _run_family_section(csv: CSV, js: BenchJSON):
     js.add("table5/family/logistic_sparse_path_batched", m=m, p=p,
            n_points=len(deltas), lane_width=lane_width, seconds=dt_b,
            iters=res_b.total_iters, saved_iters=res_b.saved_iters)
+
+
+_DIST_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import FWConfig, LASSO, engine
+from repro import distributed as dist
+from repro.data import make_regression, standardize
+from repro.sparse.matrix import SparseBlockMatrix
+
+m, p, n_iters, kappa = %(m)d, %(p)d, %(n_iters)d, %(kappa)d
+ds = standardize(make_regression(m=m, p=p, n_informative=20, noise=0.5, seed=0))
+Xs = np.asarray(ds.X.T, np.float32).copy()
+Xs[np.abs(Xs) < 0.04] = 0.0
+mat = SparseBlockMatrix.from_dense(Xs, block_size=128)
+y = np.asarray(ds.y)
+cfg = FWConfig(delta=100.0, sampling="uniform", kappa=kappa,
+               max_iters=n_iters, tol=0.0, patience=10**9)
+key = jax.random.PRNGKey(0)
+
+def timed(fn):
+    fn().alpha.block_until_ready()            # compile
+    t0 = time.perf_counter()
+    fn().alpha.block_until_ready()
+    return time.perf_counter() - t0
+
+scfg = FWConfig(**{**cfg.__dict__, "backend": "sparse"})
+t_single = timed(lambda: engine.solve(LASSO, mat, jnp.asarray(y), scfg, key))
+rows = {"single_device": {"seconds_per_iter": t_single / n_iters}}
+for n_data, n_model in ((1, 4), (2, 2)):
+    mesh = dist.fw_mesh(n_data, n_model)
+    op = dist.shard_sparse(mat, y, mesh)
+    t_dist = timed(lambda: dist.solve(LASSO, op, cfg, key))
+    # analytic per-iteration comm budget (DESIGN.md SDistributed): one
+    # |S| score psum over both axes, one (m_local,) column psum over
+    # "model", and the O(1) scalar psums of the oracle recursions
+    comm = 4 * (kappa + op.m_local + 8)
+    local = 8 * kappa * op.nnz_max + 4 * 4 * op.m_local
+    rows["mesh_%%dx%%d" %% (n_data, n_model)] = {
+        "seconds_per_iter": t_dist / n_iters,
+        "vs_single": t_single / t_dist,
+        "comm_bytes_per_iter": comm,
+        "local_bytes_per_iter": local,
+        "comm_fraction": comm / (comm + local),
+    }
+print("DISTRESULT" + json.dumps(rows))
+"""
+
+
+def _run_distributed_section(csv: CSV, js: BenchJSON):
+    """Distributed-vs-single-device per-iteration time + analytic comm
+    fraction on a forced 4-device CPU mesh. Runs in a subprocess so this
+    process keeps 1 device (DESIGN.md rule); skips gracefully when the
+    subprocess cannot run (constrained sandboxes)."""
+    import json as json_mod
+    import os
+    import subprocess
+    import sys
+
+    params = dict(m=256, p=4096, n_iters=300, kappa=64)
+    if SCALE == "ci":
+        params = dict(m=128, p=1024, n_iters=150, kappa=32)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", _DIST_SCRIPT % params],
+            capture_output=True, text=True, timeout=1200,
+            env={**os.environ, "PYTHONPATH": os.pathsep.join(sys.path)},
+        )
+        lines = [l for l in proc.stdout.splitlines()
+                 if l.startswith("DISTRESULT")]
+        if proc.returncode != 0 or not lines:
+            raise RuntimeError(proc.stderr[-500:])
+    except Exception as exc:  # noqa: BLE001 - bench must not die here
+        csv.emit("table5/distributed/skipped", 0.0, f"reason={exc}")
+        return
+    rows = json_mod.loads(lines[0][len("DISTRESULT"):])
+    for name, row in rows.items():
+        csv.emit(
+            f"table5/distributed/{name}",
+            row["seconds_per_iter"] * 1e6,
+            ";".join(f"{k}={v:.4g}" for k, v in row.items()),
+        )
+        js.add(f"table5/distributed/{name}", **params, **row)
 
 
 if __name__ == "__main__":

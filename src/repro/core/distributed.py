@@ -1,185 +1,50 @@
-"""Distributed stochastic Frank-Wolfe (DESIGN.md §4.3) via shard_map.
+"""DEPRECATED shim — the distributed FW layer moved to ``repro.distributed``.
 
-Not in the paper (single-node C++): this is the cluster-scale layer.
-The design matrix is sharded over a 2-D mesh:
-
-    Xt (p, m):  features over the "model" axis, samples over "data"
-    y, R (m,):  sharded over "data" (replicated over "model")
-    beta (p,):  sharded over "model" (replicated over "data")
-
-Per iteration:
-  1. every model-shard samples kappa/n_model local coordinates and
-     computes LOCAL partial dots against its residual shard,
-  2. psum over "data" completes the sampled gradient coordinates,
-  3. argmax over the sample within each model shard, then a global
-     argmax across "model" (pmax + masked index exchange),
-  4. the winning shard broadcasts its column contribution via masked
-     psum; every shard updates its residual slice (eq. 10) and the
-     owner updates beta[i*].
-
-Per-iteration comm: one f32[kappa_local] psum over data, two scalar
-psums, one f32[m/d_data] psum — tiny vs. the O(kappa m) local compute,
-which is exactly the paper's scalability story at cluster scale.
+The 185-line dense-only, lasso-only shard_map loop that lived here
+through PR 3 is retired: ``repro.distributed`` shards BOTH matrix
+layouts (dense tiles and block-ELL sparse cells) over a (data, model)
+mesh and runs the SAME engine hot loop for the whole solver family
+(DESIGN.md §Distributed). ``make_distributed_solver`` survives with its
+old signature, delegating to the new subsystem.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.solver_config import FWConfig
 
 
-class DistFWState(NamedTuple):
-    beta: jax.Array  # (p_local,) per model shard
-    scale: jax.Array  # ()
-    resid: jax.Array  # (m_local,) per data shard
-    s_quad: jax.Array
-    f_lin: jax.Array
-    n_dots: jax.Array
-    k: jax.Array
-    key: jax.Array
-
-
-def _fw_shard_step(
-    Xt_l, y_l, zty_l, zn2_l, state: DistFWState, cfg: FWConfig, n_model: int
-):
-    """Body executed per (data, model) shard under shard_map.
-
-    ``n_model`` is the static "model"-axis size, passed down from the mesh:
-    it sizes the per-shard sample, so it must be a Python int at trace time
-    (the pinned JAX has no ``jax.lax.axis_size``; ``psum(1, axis)`` would be
-    traced and could not shape ``idx``).
-    """
-    p_local = Xt_l.shape[0]
-    model_idx = jax.lax.axis_index("model")
-
-    key = jax.random.fold_in(state.key, state.k)
-    # every model shard uses a distinct sampling stream
-    key = jax.random.fold_in(key, model_idx)
-    kappa_local = max(cfg.kappa // n_model, 1)
-    idx = jax.random.randint(key, (kappa_local,), 0, p_local)
-
-    # 1-2. sampled gradient coords: partial dot on the local sample shard,
-    # completed by a psum over "data"
-    rows = jnp.take(Xt_l, idx, axis=0)  # (kappa_local, m_local)
-    partial = rows @ state.resid
-    grad_s = -jax.lax.psum(partial, "data")  # (kappa_local,)
-
-    # 3. local argmax -> global argmax over "model"
-    j = jnp.argmax(jnp.abs(grad_s))
-    local_best = jnp.abs(grad_s[j])
-    best_val = jax.lax.pmax(local_best, "model")
-    am_owner = local_best >= best_val  # ties: multiple owners possible; break below
-    owner_rank = jax.lax.pmax(jnp.where(am_owner, model_idx, -1), "model")
-    is_owner = model_idx == owner_rank
-
-    i_local = idx[j]
-    g_star = jax.lax.psum(jnp.where(is_owner, grad_s[j], 0.0), "model")
-    zty_star = jax.lax.psum(jnp.where(is_owner, zty_l[i_local], 0.0), "model")
-    zn2_star = jax.lax.psum(jnp.where(is_owner, zn2_l[i_local], 0.0), "model")
-
-    # 4. line search (eq. 8) — identical scalars on every shard
-    delta_t = -cfg.delta * jnp.sign(g_star)
-    g_lin = g_star + zty_star
-    num = state.s_quad - delta_t * g_star - state.f_lin
-    den = state.s_quad - 2.0 * delta_t * g_lin + delta_t**2 * zn2_star
-    lam = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, 1.0)
-    one_m = 1.0 - lam
-
-    # owner broadcasts its column slice (masked psum over "model")
-    z_col_local = jnp.where(
-        is_owner, jax.lax.dynamic_slice_in_dim(Xt_l, i_local, 1, axis=0)[0], 0.0
-    )
-    z_col = jax.lax.psum(z_col_local, "model")  # (m_local,)
-
-    resid = one_m * state.resid + lam * (y_l - delta_t * z_col)
-
-    # scaled-representation coefficient update (owner only)
-    new_scale = state.scale * one_m
-    do_renorm = new_scale < cfg.renorm_threshold
-    beta, scale = jax.lax.cond(
-        do_renorm,
-        lambda b, s: (b * s, jnp.ones((), b.dtype)),
-        lambda b, s: (b, s),
-        state.beta,
-        new_scale,
-    )
-    upd = delta_t * lam / jnp.maximum(scale, cfg.eps_den)
-    beta = jnp.where(
-        (jnp.arange(p_local) == i_local) & is_owner, beta + upd, beta
-    )
-
-    s_quad = (
-        one_m**2 * state.s_quad
-        + 2.0 * delta_t * lam * one_m * g_lin
-        + delta_t**2 * lam**2 * zn2_star
-    )
-    f_lin = one_m * state.f_lin + delta_t * lam * zty_star
-
-    # periodic refresh from the (sharded) residual
-    refresh = (state.k % cfg.refresh_every) == (cfg.refresh_every - 1)
-    v_l = y_l - resid
-    s_exact = jax.lax.psum(jnp.dot(v_l, v_l), "data")
-    f_exact = jax.lax.psum(jnp.dot(v_l, y_l), "data")
-    s_quad = jnp.where(refresh, s_exact, s_quad)
-    f_lin = jnp.where(refresh, f_exact, f_lin)
-
-    return DistFWState(
-        beta=beta,
-        scale=scale,
-        resid=resid,
-        s_quad=s_quad,
-        f_lin=f_lin,
-        n_dots=state.n_dots + kappa_local * n_model,
-        k=state.k + 1,
-        key=state.key,
-    )
-
-
 def make_distributed_solver(mesh: Mesh, cfg: FWConfig, n_iters: int):
-    """Build a jitted distributed FW solver over the given 2-D mesh.
+    """Deprecated: use ``repro.distributed`` (shard_dense/shard_sparse +
+    driver.solve) directly.
 
-    Returns solve(Xt, y, key) -> (alpha, objective, n_dots). Arrays are
-    accepted unsharded and placed via device_put by the caller or here.
+    Returns solve(Xt, y, key) -> (alpha, objective, n_dots) like the
+    retired loop: a fixed-iteration dense lasso run on the given mesh.
+    Note the dot-product accounting now counts the GLOBAL sample size
+    kappa per iteration (the engine convention) instead of the old
+    kappa_local * n_model rounding.
     """
-    from jax.experimental.shard_map import shard_map
-
-    n_model = int(mesh.shape["model"])
-
-    def shard_body(Xt_l, y_l, key):
-        p_local = Xt_l.shape[0]
-        zty_l = jax.lax.psum(Xt_l @ y_l, "data")  # full z^T y, local features
-        zn2_l = jax.lax.psum(jnp.sum(Xt_l * Xt_l, axis=1), "data")
-        yty = jax.lax.psum(jnp.dot(y_l, y_l), "data")
-
-        state = DistFWState(
-            beta=jnp.zeros((p_local,), Xt_l.dtype),
-            scale=jnp.ones((), Xt_l.dtype),
-            resid=y_l,
-            s_quad=jnp.zeros((), Xt_l.dtype),
-            f_lin=jnp.zeros((), Xt_l.dtype),
-            n_dots=jnp.zeros((), jnp.int32),
-            k=jnp.zeros((), jnp.int32),
-            key=key,
-        )
-
-        def body(s, _):
-            return _fw_shard_step(Xt_l, y_l, zty_l, zn2_l, s, cfg, n_model), None
-
-        state, _ = jax.lax.scan(body, state, None, length=n_iters)
-        alpha_l = state.scale * state.beta
-        obj = 0.5 * yty + 0.5 * state.s_quad - state.f_lin
-        return alpha_l, obj, state.n_dots
-
-    mapped = shard_map(
-        shard_body,
-        mesh=mesh,
-        in_specs=(P("model", "data"), P("data"), P()),
-        out_specs=(P("model"), P(), P()),
-        check_rep=False,
+    warnings.warn(
+        "repro.core.distributed is deprecated; use repro.distributed "
+        "(shard_dense / shard_sparse + driver.solve) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    return jax.jit(mapped)
+    from repro.core.fw_lasso import LASSO
+    from repro.distributed import driver, shard
+
+    run_cfg = dataclasses.replace(
+        cfg, max_iters=n_iters, tol=0.0, patience=n_iters + 1
+    )
+
+    def solve(Xt, y, key):
+        op = shard.shard_dense(jnp.asarray(Xt), jnp.asarray(y), mesh)
+        res = driver.solve(LASSO, op, run_cfg, key)
+        return res.alpha, res.objective, res.n_dots
+
+    return solve

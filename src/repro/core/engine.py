@@ -22,7 +22,8 @@ Oracle protocol — what a new objective must provide:
 
     needs_stats: bool          class attr; True to precompute ColStats
     extra_dots: int            per-step dot-product surcharge (accounting)
-    init_co(y, v, beta, dtype) co-state from X@alpha0 (``v``; None = cold)
+    init_co(y, v, beta, dtype, cfg)
+                               co-state from X@alpha0 (``v``; None = cold)
     cograd(co, y) -> (m,)      w with sampled linear scores = -z_i^T w
     score_extra(beta, scale)   optional per-coordinate score shift
                                (idx-array -> addend), e.g. EN's +l2*a_i
@@ -30,7 +31,19 @@ Oracle protocol — what a new objective must provide:
                                feeds the stall counter (gap_rtol rule),
                                ``aux`` is forwarded to update_co
     update_co(...) -> co       the O(m)/O(1) state recursions + refresh
-    objective(y, stats, co)    final objective value
+    objective(y, stats, co, cfg)
+                               final objective value
+    gap(Xt, y, alpha, delta, cfg)
+                               certified FW duality gap at ``alpha``
+                               (alpha^T grad + delta*||grad||_inf with the
+                               oracle's OWN gradient — one full O(nnz)
+                               pass; delegates to ``oracle_gap`` below)
+
+``cfg`` reaches every reduction over the sample axis so one oracle
+definition serves the single-device backends AND the mesh-sharded
+'distributed' backend (repro.distributed): oracles touch the m axis only
+through ``vertex.mdot`` / ``vertex.msum``, which psum over the "data"
+mesh axis exactly when cfg says the distributed backend is active.
 
 What the engine guarantees to oracles: the index stream is a pure
 function of (key, cfg, p) shared by every backend ('uniform' replays
@@ -84,6 +97,8 @@ class SolveResult(NamedTuple):
     n_dots: jax.Array
     active: jax.Array  # () number of nonzero coefficients
     converged: jax.Array
+    # certified FW duality gap at alpha (cfg.report_gap; None otherwise)
+    gap: Optional[jax.Array] = None
 
 
 def precompute_colstats(
@@ -104,6 +119,7 @@ def precompute_colstats(
                 y,
                 use_kernel=vertex.use_sparse_kernel(cfg),
                 interpret=vertex.use_interpret(cfg),
+                gather_mode=vertex.resolve_gather_mode(cfg),
             )
         else:
             zty, znorm2 = sparse_ops.sparse_colstats(Xt, y)
@@ -122,9 +138,15 @@ def _patience(cfg: FWConfig) -> int:
     return cfg.patience if cfg.sampling != "full" else 1
 
 
-def init_state(oracle, Xt, y, key, alpha0=None) -> EngineState:
-    """Start from the null solution, or warm-start from ``alpha0``."""
-    p = Xt.shape[0]
+def init_state(oracle, Xt, y, key, alpha0=None, cfg=None, p=None) -> EngineState:
+    """Start from the null solution, or warm-start from ``alpha0``.
+
+    ``p`` overrides the feature count read off ``Xt`` — the distributed
+    driver passes the GLOBAL p while ``Xt`` is a local shard; ``cfg``
+    reaches the warm-start matvec and the oracle co-state init so their
+    sample-axis reductions complete across the mesh.
+    """
+    p = Xt.shape[0] if p is None else p
     dtype = Xt.dtype
     if alpha0 is None:
         beta = jnp.zeros((p,), dtype)
@@ -132,12 +154,12 @@ def init_state(oracle, Xt, y, key, alpha0=None) -> EngineState:
         maxabs = jnp.zeros((), dtype)
     else:
         beta = alpha0.astype(dtype)
-        v = vertex.matvec(Xt, beta)  # X alpha, O(nnz) sparse
+        v = vertex.matvec(Xt, beta, cfg)  # X alpha, O(nnz) sparse
         maxabs = jnp.max(jnp.abs(beta))
     return EngineState(
         beta=beta,
         scale=jnp.ones((), dtype),
-        co=oracle.init_co(y, v, beta, dtype),
+        co=oracle.init_co(y, v, beta, dtype, cfg),
         maxabs=maxabs,
         step_inf=jnp.full((), jnp.inf, dtype),
         stall=jnp.zeros((), jnp.int32),
@@ -214,15 +236,80 @@ def step(oracle, Xt, y, stats, state: EngineState, cfg: FWConfig, delta) -> Engi
     )
 
 
-def _result(oracle, y, stats, final: EngineState, patience: int) -> SolveResult:
+def certified_gap(oracle, Xt, y, co, beta, scale, delta, cfg=None) -> jax.Array:
+    """Exact FW duality gap g(alpha) = alpha^T grad + delta*||grad||_inf
+    from a live co-state — one full-gradient pass (O(nnz) sparse,
+    O(p*m) dense), certification only, never the hot loop.
+
+    Oracle-generic: the gradient is the linear part -X^T w (w = the
+    oracle's co-gradient) plus its ``score_extra`` shift over every
+    coordinate (the elastic-net's +l2*alpha). Under the distributed
+    backend the gradient assembles via psum/all_gather and the returned
+    scalar is replicated on every shard.
+    """
+    p = beta.shape[0]
+    w = oracle.cograd(co, y)
+    grad = vertex.grad_full(Xt, w, cfg)[:p]  # Xt may be backend-padded
+    extra_fn = oracle.score_extra(beta, scale)
+    if extra_fn is not None:
+        grad = grad + extra_fn(jnp.arange(p))
+    alpha = scale * beta
+    return jnp.dot(alpha, grad) + delta * jnp.max(jnp.abs(grad))
+
+
+def oracle_gap(oracle, Xt, y, alpha, delta, cfg=None) -> jax.Array:
+    """Certified duality gap at a bare coefficient vector: rebuild the
+    oracle co-state from X alpha, then ``certified_gap``. This is the
+    shared implementation behind every oracle's ``gap()`` protocol
+    method (replaces the lasso-only ``duality_gap`` special case)."""
+    v = vertex.matvec(Xt, alpha, cfg)
+    co = oracle.init_co(y, v, alpha, alpha.dtype, cfg)
+    return certified_gap(
+        oracle, Xt, y, co, alpha, jnp.ones((), alpha.dtype), delta, cfg
+    )
+
+
+def run_loop(oracle, Xt_run, y, stats, state0, cfg, delta, patience):
+    """The sequential while_loop shared by ``solve`` and the distributed
+    driver: step until the §Stopping rule fires or max_iters."""
+
+    def cond(state: EngineState):
+        return (state.k < cfg.max_iters) & (state.stall < patience)
+
+    def body(state: EngineState):
+        return step(oracle, Xt_run, y, stats, state, cfg, delta)
+
+    return jax.lax.while_loop(cond, body, state0)
+
+
+def history_loop(oracle, Xt_run, y, stats, state0, cfg, n_iters: int):
+    """The fixed-iteration scan shared by ``solve_with_history`` and the
+    distributed driver; returns (final state, per-step objectives)."""
+
+    def body(state, _):
+        new = step(oracle, Xt_run, y, stats, state, cfg, jnp.asarray(cfg.delta))
+        return new, oracle.objective(y, stats, new.co, cfg)
+
+    return jax.lax.scan(body, state0, None, length=n_iters)
+
+
+def _result(
+    oracle, Xt, y, stats, final: EngineState, patience: int, cfg, delta
+) -> SolveResult:
     alpha = final.scale * final.beta
+    gap = None
+    if cfg is not None and cfg.report_gap:
+        gap = certified_gap(
+            oracle, Xt, y, final.co, final.beta, final.scale, delta, cfg
+        )
     return SolveResult(
         alpha=alpha,
-        objective=oracle.objective(y, stats, final.co),
+        objective=oracle.objective(y, stats, final.co, cfg),
         iterations=final.k,
         n_dots=final.n_dots,
         active=jnp.sum(alpha != 0.0),
         converged=final.stall >= patience,
+        gap=gap,
     )
 
 
@@ -243,18 +330,11 @@ def solve(
     vertex.check_matrix_backend(Xt, cfg)
     delta = jnp.asarray(cfg.delta if delta is None else delta)
     stats = precompute_colstats(Xt, y, cfg) if oracle.needs_stats else None
-    state0 = init_state(oracle, Xt, y, key, alpha0)
+    state0 = init_state(oracle, Xt, y, key, alpha0, cfg)
     patience = _patience(cfg)
     Xt = vertex.pad_backend_matrix(Xt, cfg)  # once, outside the hot loop
-
-    def cond(state: EngineState):
-        return (state.k < cfg.max_iters) & (state.stall < patience)
-
-    def body(state: EngineState):
-        return step(oracle, Xt, y, stats, state, cfg, delta)
-
-    final = jax.lax.while_loop(cond, body, state0)
-    return _result(oracle, y, stats, final, patience)
+    final = run_loop(oracle, Xt, y, stats, state0, cfg, delta, patience)
+    return _result(oracle, Xt, y, stats, final, patience, cfg, delta)
 
 
 @functools.partial(jax.jit, static_argnames=("oracle", "cfg", "n_iters"))
@@ -271,20 +351,63 @@ def solve_with_history(
     plots). Returns (result, objective_history[n_iters])."""
     vertex.check_matrix_backend(Xt, cfg)
     stats = precompute_colstats(Xt, y, cfg) if oracle.needs_stats else None
-    state0 = init_state(oracle, Xt, y, key, alpha0)
+    state0 = init_state(oracle, Xt, y, key, alpha0, cfg)
     Xt_run = vertex.pad_backend_matrix(Xt, cfg)
-
-    def body(state, _):
-        new = step(oracle, Xt_run, y, stats, state, cfg, jnp.asarray(cfg.delta))
-        return new, oracle.objective(y, stats, new.co)
-
-    final, hist = jax.lax.scan(body, state0, None, length=n_iters)
-    return _result(oracle, y, stats, final, _patience(cfg)), hist
+    final, hist = history_loop(oracle, Xt_run, y, stats, state0, cfg, n_iters)
+    delta = jnp.asarray(cfg.delta)
+    return _result(oracle, Xt_run, y, stats, final, _patience(cfg), cfg, delta), hist
 
 
 def _lane_mask(active: jax.Array, leaf: jax.Array) -> jax.Array:
     """Broadcast a (lanes,) bool against a (lanes, ...) state leaf."""
     return active.reshape(active.shape + (1,) * (leaf.ndim - 1))
+
+
+def batched_loop(oracle, Xt_run, y, stats, states0, cfg, deltas, patience):
+    """The lane-pruned while_loop shared by ``solve_batched`` and the
+    distributed driver (repro.distributed.driver runs it inside its
+    shard_map with per-shard operands). Returns (final states, saved)."""
+
+    def lane_active(states):
+        return (states.k < cfg.max_iters) & (states.stall < patience)
+
+    def cond(carry):
+        states, _ = carry
+        return jnp.any(lane_active(states))
+
+    def body(carry):
+        states, saved = carry
+        active = lane_active(states)
+        stepped = jax.vmap(
+            lambda s, d: step(oracle, Xt_run, y, stats, s, cfg, d)
+        )(states, deltas)
+        merged = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(_lane_mask(active, n), n, o), stepped, states
+        )
+        return merged, saved + jnp.sum((~active).astype(jnp.int32))
+
+    return jax.lax.while_loop(cond, body, (states0, jnp.zeros((), jnp.int32)))
+
+
+def batched_result(oracle, Xt_run, y, stats, final, patience, cfg, deltas):
+    """Assemble the per-lane SolveResult (shared with the distributed
+    driver); certified per-lane gaps when ``cfg.report_gap``."""
+    alpha = final.scale[:, None] * final.beta
+    objective = jax.vmap(lambda co: oracle.objective(y, stats, co, cfg))(final.co)
+    gap = None
+    if cfg.report_gap:
+        gap = jax.vmap(
+            lambda co, b, s, d: certified_gap(oracle, Xt_run, y, co, b, s, d, cfg)
+        )(final.co, final.beta, final.scale, deltas)
+    return SolveResult(
+        alpha=alpha,
+        objective=objective,
+        iterations=final.k,
+        n_dots=final.n_dots,
+        active=jnp.sum(alpha != 0.0, axis=1),
+        converged=final.stall >= patience,
+        gap=gap,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("oracle", "cfg"))
@@ -312,41 +435,13 @@ def solve_batched(
     """
     vertex.check_matrix_backend(Xt, cfg)
     stats = precompute_colstats(Xt, y, cfg) if oracle.needs_stats else None
-    states0 = jax.vmap(lambda k, a0: init_state(oracle, Xt, y, k, a0))(
+    states0 = jax.vmap(lambda k, a0: init_state(oracle, Xt, y, k, a0, cfg))(
         keys, alpha0s
     )
     patience = _patience(cfg)
     Xt_run = vertex.pad_backend_matrix(Xt, cfg)
-
-    def lane_active(states):
-        return (states.k < cfg.max_iters) & (states.stall < patience)
-
-    def cond(carry):
-        states, _ = carry
-        return jnp.any(lane_active(states))
-
-    def body(carry):
-        states, saved = carry
-        active = lane_active(states)
-        stepped = jax.vmap(
-            lambda s, d: step(oracle, Xt_run, y, stats, s, cfg, d)
-        )(states, deltas)
-        merged = jax.tree_util.tree_map(
-            lambda n, o: jnp.where(_lane_mask(active, n), n, o), stepped, states
-        )
-        return merged, saved + jnp.sum((~active).astype(jnp.int32))
-
-    final, saved = jax.lax.while_loop(
-        cond, body, (states0, jnp.zeros((), jnp.int32))
+    final, saved = batched_loop(
+        oracle, Xt_run, y, stats, states0, cfg, deltas, patience
     )
-    alpha = final.scale[:, None] * final.beta
-    objective = jax.vmap(lambda co: oracle.objective(y, stats, co))(final.co)
-    res = SolveResult(
-        alpha=alpha,
-        objective=objective,
-        iterations=final.k,
-        n_dots=final.n_dots,
-        active=jnp.sum(alpha != 0.0, axis=1),
-        converged=final.stall >= patience,
-    )
+    res = batched_result(oracle, Xt_run, y, stats, final, patience, cfg, deltas)
     return res, saved

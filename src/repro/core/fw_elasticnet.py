@@ -52,14 +52,15 @@ class ENOracle:
     needs_stats = True
     extra_dots = 0
 
-    def init_co(self, y, v, beta, dtype) -> ENCo:
+    def init_co(self, y, v, beta, dtype, cfg=None) -> ENCo:
         if v is None:
             zero = jnp.zeros((), dtype)
             return ENCo(resid=y.astype(dtype), s_quad=zero, f_lin=zero, q_norm=zero)
         return ENCo(
             resid=y - v,
-            s_quad=jnp.dot(v, v),
-            f_lin=jnp.dot(v, y),
+            s_quad=vertex.mdot(v, v, cfg),
+            f_lin=vertex.mdot(v, y, cfg),
+            # beta is replicated under the distributed backend: plain dot
             q_norm=jnp.dot(beta, beta),
         )
 
@@ -84,7 +85,16 @@ class ENOracle:
             + self.l2 * (co.q_norm - 2.0 * delta_t * a_star + delta_t**2)
         )
         lam = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, 1.0)
-        return lam, jnp.asarray(False), g_lin
+        # ``num`` = -(grad^T d) IS the sampled FW duality gap for the
+        # elastic-net objective; below the fp32 rounding floor of its own
+        # terms the step is noise (gap_rtol stall, DESIGN.md §Stopping) —
+        # this is what lets warm-started EN paths stop immediately.
+        gap_scale = (
+            co.s_quad + jnp.abs(co.f_lin) + jnp.abs(delta_t * g_x)
+            + self.l2 * (co.q_norm + jnp.abs(delta_t * a_star))
+        )
+        no_progress = num <= cfg.gap_rtol * gap_scale
+        return lam, no_progress, g_lin
 
     def update_co(
         self, Xt, y, stats, co: ENCo, beta, scale, i_star, a_star, lam,
@@ -105,11 +115,17 @@ class ENOracle:
         q_norm = jnp.where(refresh, q_exact, q_norm)
         return ENCo(resid=resid, s_quad=s_quad, f_lin=f_lin, q_norm=q_norm)
 
-    def objective(self, y, stats, co: ENCo):
+    def objective(self, y, stats, co: ENCo, cfg=None):
         return (
             0.5 * stats.yty + 0.5 * co.s_quad - co.f_lin
             + 0.5 * self.l2 * co.q_norm
         )
+
+    def gap(self, Xt, y, alpha, delta, cfg=None):
+        """Certified FW duality gap with the ELASTIC-NET gradient
+        -X^T R + l2*alpha (the +l2 term rides score_extra) — oracle
+        protocol."""
+        return engine.oracle_gap(self, Xt, y, alpha, delta, cfg)
 
 
 def en_solve(

@@ -34,8 +34,6 @@ import jax.numpy as jnp
 from repro.core import engine, vertex
 from repro.core.engine import ColStats, EngineState, precompute_colstats
 from repro.core.solver_config import FWConfig
-from repro.sparse import ops as sparse_ops
-from repro.sparse.matrix import SparseBlockMatrix
 
 # Back-compat aliases: these helpers moved to core.vertex in the engine
 # refactor; tests and downstream code keep importing them from here.
@@ -62,7 +60,9 @@ def sf_update(stats, s_quad, f_lin, resid, y, i_star, lam, delta_t, g_lin, k, cf
 
     Shared by the lasso and elastic-net oracles — the elastic-net layers
     its Q recursion on top. Returns (s_quad, f_lin, refresh) so callers
-    can refresh their own extra state on the same cadence.
+    can refresh their own extra state on the same cadence. The refresh
+    dots run through ``vertex.mdot`` so the recursion completes across
+    the "data" mesh axis under the distributed backend.
     """
     one_m = 1.0 - lam
     s_quad = (
@@ -73,8 +73,8 @@ def sf_update(stats, s_quad, f_lin, resid, y, i_star, lam, delta_t, g_lin, k, cf
     f_lin = one_m * f_lin + delta_t * lam * stats.zty[i_star]
     refresh = (k % cfg.refresh_every) == (cfg.refresh_every - 1)
     v = y - resid
-    s_quad = jnp.where(refresh, jnp.dot(v, v), s_quad)
-    f_lin = jnp.where(refresh, jnp.dot(v, y), f_lin)
+    s_quad = jnp.where(refresh, vertex.mdot(v, v, cfg), s_quad)
+    f_lin = jnp.where(refresh, vertex.mdot(v, y, cfg), f_lin)
     return s_quad, f_lin, refresh
 
 
@@ -85,14 +85,18 @@ class LassoOracle:
     needs_stats = True
     extra_dots = 0
 
-    def init_co(self, y, v, beta, dtype) -> LassoCo:
+    def init_co(self, y, v, beta, dtype, cfg=None) -> LassoCo:
         if v is None:
             return LassoCo(
                 resid=y.astype(dtype),
                 s_quad=jnp.zeros((), dtype),
                 f_lin=jnp.zeros((), dtype),
             )
-        return LassoCo(resid=y - v, s_quad=jnp.dot(v, v), f_lin=jnp.dot(v, y))
+        return LassoCo(
+            resid=y - v,
+            s_quad=vertex.mdot(v, v, cfg),
+            f_lin=vertex.mdot(v, y, cfg),
+        )
 
     def cograd(self, co: LassoCo, y):
         """Sampled scores are -z_i^T R (method of residuals, eq. 7)."""
@@ -134,9 +138,14 @@ class LassoOracle:
         )
         return LassoCo(resid=resid, s_quad=s_quad, f_lin=f_lin)
 
-    def objective(self, y, stats, co: LassoCo):
+    def objective(self, y, stats, co: LassoCo, cfg=None):
         """f(alpha^k) = 1/2 y^T y + 1/2 S^k - F^k (paper eq. 8 block)."""
         return 0.5 * stats.yty + 0.5 * co.s_quad - co.f_lin
+
+    def gap(self, Xt, y, alpha, delta, cfg=None):
+        """Certified FW duality gap alpha^T grad + delta*||grad||_inf with
+        grad = -X^T (y - X alpha) — one O(nnz) pass (oracle protocol)."""
+        return engine.oracle_gap(self, Xt, y, alpha, delta, cfg)
 
 
 LASSO = LassoOracle()
@@ -230,12 +239,12 @@ def duality_gap(Xt, state, delta: float) -> jax.Array:
     """Exact FW duality gap g(alpha) = alpha^T grad + delta*||grad||_inf.
 
     O(m p) dense, O(nnz) sparse — certification / tests, not the hot loop.
+    Legacy lasso-only surface: the oracle-generic form is ``gap()`` on
+    every oracle (``engine.oracle_gap``); this wrapper reads the gradient
+    off a live ``FWState`` residual instead of recomputing it.
     """
     alpha = state.scale * state.beta
-    if isinstance(Xt, SparseBlockMatrix):
-        grad = -sparse_ops.sparse_transpose_matvec(Xt, state.resid)
-    else:
-        grad = -(Xt @ state.resid)
+    grad = vertex.grad_full(Xt, state.resid)[: alpha.shape[0]]
     return jnp.dot(alpha, grad) + delta * jnp.max(jnp.abs(grad))
 
 

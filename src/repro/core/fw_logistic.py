@@ -36,8 +36,11 @@ from repro.core.solver_config import FWConfig
 LogisticResult = engine.SolveResult
 
 
-def _loss(margin, y):
-    return jnp.sum(jnp.logaddexp(0.0, -y * margin))
+def _loss(margin, y, cfg=None):
+    # padded samples (distributed m-padding) carry y == 0 — real labels
+    # are +-1 — and must not contribute their log(2) rest loss
+    per = jnp.logaddexp(0.0, -y * margin)
+    return vertex.msum(jnp.where(y != 0, per, 0.0), cfg)
 
 
 class LogisticCo(NamedTuple):
@@ -56,10 +59,11 @@ class LogisticOracle:
 
     @property
     def extra_dots(self) -> int:
-        # each bisection probe is one O(m) dot, plus the two endpoint tests
-        return self.n_bisect + 2
+        # each bisection probe is one O(m) dot, plus the two endpoint
+        # tests and the sampled-gap stall statistic
+        return self.n_bisect + 3
 
-    def init_co(self, y, v, beta, dtype) -> LogisticCo:
+    def init_co(self, y, v, beta, dtype, cfg=None) -> LogisticCo:
         return LogisticCo(margin=jnp.zeros_like(y) if v is None else v)
 
     def cograd(self, co: LogisticCo, y):
@@ -79,7 +83,7 @@ class LogisticOracle:
 
         def phi_prime(lam):
             mg = co.margin + lam * dm
-            return jnp.dot(-y * jax.nn.sigmoid(-y * mg), dm)
+            return vertex.mdot(-y * jax.nn.sigmoid(-y * mg), dm, cfg)
 
         # bisection on [0, 1]; phi' monotone increasing (convexity)
         def body(_, ab):
@@ -93,7 +97,19 @@ class LogisticOracle:
         lam = 0.5 * (a + b)
         lam = jnp.where(phi_prime(jnp.ones(())) <= 0, 1.0, lam)
         lam = jnp.where(phi_prime(jnp.zeros(())) >= 0, 0.0, lam)
-        return lam, jnp.asarray(False), dm
+
+        # sampled FW duality gap g_S = alpha^T grad + delta |grad_{i*}|:
+        # alpha^T grad_alpha = margin^T grad_margin (grad_alpha = X^T g_m),
+        # so the gap statistic is O(m) — no full-gradient pass. A gap
+        # below the fp32 rounding floor of its own terms cannot make real
+        # progress (gap_rtol noise-floor stall, DESIGN.md §Stopping);
+        # counting it lets warm-started paths terminate immediately.
+        grad_m = -y * jax.nn.sigmoid(-y * co.margin)
+        a_grad = vertex.mdot(co.margin, grad_m, cfg)
+        gap_s = a_grad + jnp.abs(delta_t * g_sel)
+        gap_scale = jnp.abs(a_grad) + jnp.abs(delta_t * g_sel)
+        no_progress = gap_s <= cfg.gap_rtol * gap_scale
+        return lam, no_progress, dm
 
     def update_co(
         self, Xt, y, stats, co: LogisticCo, beta, scale, i_star, a_star, lam,
@@ -101,8 +117,13 @@ class LogisticOracle:
     ) -> LogisticCo:
         return LogisticCo(margin=co.margin + lam * aux)
 
-    def objective(self, y, stats, co: LogisticCo):
-        return _loss(co.margin, y)
+    def objective(self, y, stats, co: LogisticCo, cfg=None):
+        return _loss(co.margin, y, cfg)
+
+    def gap(self, Xt, y, alpha, delta, cfg=None):
+        """Certified FW duality gap with the LOGISTIC gradient
+        X^T (-y sigmoid(-y m)) — oracle protocol (§Stopping)."""
+        return engine.oracle_gap(self, Xt, y, alpha, delta, cfg)
 
 
 LOGISTIC = LogisticOracle()

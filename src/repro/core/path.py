@@ -43,6 +43,8 @@ class PathPoint(NamedTuple):
     seconds: float
     alpha_nnz_idx: np.ndarray
     alpha_nnz_val: np.ndarray
+    # certified FW duality gap (oracle gap(), FWConfig.report_gap); NaN off
+    gap: float = float("nan")
 
 
 class PathResult(NamedTuple):
@@ -85,6 +87,13 @@ def _sparsify(alpha: jax.Array):
     return idx, a[idx]
 
 
+def _point_gap(gap, lane=None) -> float:
+    """PathPoint.gap from SolveResult.gap (None when report_gap is off)."""
+    if gap is None:
+        return float("nan")
+    return float(gap if lane is None else gap[lane])
+
+
 def fw_path(
     Xt,
     y,
@@ -92,13 +101,24 @@ def fw_path(
     base_cfg: FWConfig,
     seed: int = 0,
     oracle=None,
+    *,
+    solve_fn=None,
 ) -> PathResult:
     """Stochastic-FW path with the paper's l1-rescaling warm start.
 
     ``oracle`` selects the objective (default ``fw_lasso.LASSO``; pass
     ``fw_logistic.LOGISTIC`` or an ``ENOracle(l2)`` for the extensions).
+    ``solve_fn`` overrides the engine entry point — the distributed
+    driver injects its shard_map solver here so the SAME path protocol
+    (and ``PathPoint.gap`` certification when ``cfg.report_gap``) runs on
+    a mesh. Signature: ``solve_fn(oracle, Xt, y, cfg, key, alpha0,
+    delta) -> SolveResult``.
     """
     oracle = fw_lasso.LASSO if oracle is None else oracle
+    if solve_fn is None:
+        solve_fn = lambda o, X, yv, c, k, a0, d: engine.solve(
+            o, X, yv, c, k, a0, delta=d
+        )
     key = jax.random.PRNGKey(seed)
     alpha = None
     points = []
@@ -113,7 +133,7 @@ def fw_path(
                 alpha = alpha * (float(d) / l1)  # paper's rescaling heuristic
         key, sub = jax.random.split(key)
         t0 = time.perf_counter()
-        res = engine.solve(oracle, Xt, y, cfg, sub, alpha, delta=float(d))
+        res = solve_fn(oracle, Xt, y, cfg, sub, alpha, float(d))
         res.alpha.block_until_ready()
         dt = time.perf_counter() - t0
         alpha = res.alpha
@@ -129,6 +149,7 @@ def fw_path(
                 seconds=dt,
                 alpha_nnz_idx=idx,
                 alpha_nnz_val=val,
+                gap=_point_gap(res.gap),
             )
         )
         total_dots += int(res.n_dots)
@@ -153,6 +174,8 @@ def fw_path_batched(
     seed: int = 0,
     lane_width: Optional[int] = None,
     oracle=None,
+    *,
+    solve_batched_fn=None,
 ) -> PathResult:
     """Stochastic-FW path solved in parallel delta lanes (DESIGN.md §Path).
 
@@ -165,8 +188,12 @@ def fw_path_batched(
     repeating the last delta so every chunk shares one compiled program.
     Lanes that converge early are frozen by the engine's masked update;
     the skipped lane-iterations are summed into ``PathResult.saved_iters``.
+    ``solve_batched_fn`` overrides ``engine.solve_batched`` (same
+    signature) — the distributed driver's injection point.
     """
     oracle = fw_lasso.LASSO if oracle is None else oracle
+    if solve_batched_fn is None:
+        solve_batched_fn = engine.solve_batched
     deltas = np.asarray(deltas, dtype=np.float64)
     n = len(deltas)
     if lane_width is None:
@@ -191,7 +218,7 @@ def fw_path_batched(
         alpha0s = carry[None, :] * (d_arr / jnp.maximum(l1, 1e-12))[:, None]
         key, *subs = jax.random.split(key, lane_width + 1)
         t0 = time.perf_counter()
-        res, _ = engine.solve_batched(
+        res, _ = solve_batched_fn(
             oracle, Xt, y, base_cfg, jnp.stack(subs), alpha0s, d_arr
         )
         res.alpha.block_until_ready()
@@ -217,6 +244,7 @@ def fw_path_batched(
                 seconds=dt / real_lanes,
                 alpha_nnz_idx=idx,
                 alpha_nnz_val=val,
+                gap=_point_gap(res.gap, i),
             )
             total_dots += int(res.n_dots[i])
             total_iters += int(res.iterations[i])

@@ -6,6 +6,27 @@ from typing import Optional
 
 
 @dataclass(frozen=True)
+class DistSpec:
+    """Static sharding vocabulary of the distributed backend (DESIGN.md
+    §Distributed). Lives inside FWConfig so the jitted entry points see
+    the mesh geometry as part of their static config key; the axis names
+    are the shard_map axes the collectives reduce over.
+
+    The convention shared by ``repro.distributed``: the design matrix is
+    sharded feature-blocks over ``model_axis`` and samples over
+    ``data_axis``; the residual/margin co-state and targets live as
+    per-``data``-slice vectors; beta and the column statistics are
+    REPLICATED (O(p) per host — ~17 MB at the paper's p = 4.2M, against
+    the O(nnz)/O(p*m) matrix that sharding must split).
+    """
+
+    n_data: int = 1
+    n_model: int = 1
+    data_axis: str = "data"
+    model_axis: str = "model"
+
+
+@dataclass(frozen=True)
 class FWConfig:
     """Configuration of the stochastic Frank-Wolfe Lasso solver.
 
@@ -25,12 +46,30 @@ class FWConfig:
         expects ``Xt`` to be a repro.sparse.SparseBlockMatrix and the
         three O(kappa*m) primitives drop to O(kappa*nnz_max); block
         geometry comes from the MATRIX, so ``block_size`` is ignored).
+        'distributed' is the mesh-sharded variant of both layouts — it
+        only runs inside ``repro.distributed.driver``'s shard_map (which
+        sets it, together with ``dist``, from the operand's mesh); the
+        plain entry points reject it.
       sparse_kernel: 'sparse' backend only — None = auto (Pallas
         kernels/sparse_grad on TPU, pure-XLA gather elsewhere), True/False
         forces the choice (tests force True + interpret).
+      gather_mode: how the sparse Pallas kernels read the VMEM-resident
+        residual/targets at the stored row indices: 'take' (in-kernel
+        jnp.take gather), 'onehot' (one-hot matmul fallback for TPUs where
+        the VMEM gather fails to lower — MXU-friendly, O(slots * m)
+        compute), or 'auto' (currently 'take'; the knob exists so a
+        failing lowering can be routed around without a code change).
+      report_gap: compute the certified FW duality gap
+        g(alpha) = alpha^T grad + delta*||grad||_inf (oracle ``gap()``
+        gradients) at the END of each solve — one O(nnz)/O(p*m) full
+        gradient pass, surfaced as ``SolveResult.gap`` and
+        ``PathPoint.gap``. Off by default: certification is not hot-loop
+        work.
       m_tile: sample-dimension tile for the Pallas kernels.
       interpret: force Pallas interpret mode; None = auto (interpret
         everywhere except on real TPU devices).
+      dist: static mesh vocabulary when ``backend == 'distributed'``
+        (set by ``repro.distributed``; plain solves leave it None).
     """
 
     delta: float
@@ -46,8 +85,11 @@ class FWConfig:
     gap_rtol: float = 1e-6
     backend: str = "xla"
     sparse_kernel: Optional[bool] = None
+    gather_mode: str = "auto"
+    report_gap: bool = False
     m_tile: int = 512
     interpret: Optional[bool] = None
+    dist: Optional[DistSpec] = None
 
 
 @dataclass(frozen=True)

@@ -18,6 +18,16 @@ exact in IEEE, so scores equal ``z_i^T grad_margin`` bitwise).
 Also here: the backend-dispatched O(m) column recursions every oracle's
 state update needs (eq. 10 and its margin analogue), and the dense
 column accessor the logistic bisection line search uses.
+
+The fourth backend, 'distributed', routes every primitive to
+``repro.distributed.backend`` (lazy import — that package sits ABOVE the
+core in the layering): the same engine step then runs unchanged inside a
+shard_map over a (data, model) mesh, with the matrix shard-local, beta
+and the column statistics replicated, and the residual/margin sliced
+over "data". Oracles reach the sample axis only through ``mdot`` /
+``msum`` here, which psum over ``cfg.dist.data_axis`` exactly when the
+distributed backend is active — single-device solves compile to the
+plain reductions.
 """
 from __future__ import annotations
 
@@ -54,8 +64,56 @@ def use_sparse_kernel(cfg: FWConfig) -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_gather_mode(cfg: FWConfig) -> str:
+    """In-kernel VMEM read for the sparse Pallas kernels. 'auto' resolves
+    to the direct 'take' gather; 'onehot' is the explicit matmul fallback
+    for TPU targets where the gather fails to lower (ROADMAP item)."""
+    if cfg.gather_mode == "auto":
+        return "take"
+    if cfg.gather_mode not in ("take", "onehot"):
+        raise ValueError(
+            f"unknown gather_mode {cfg.gather_mode!r} (take|onehot|auto)"
+        )
+    return cfg.gather_mode
+
+
+def dist_spec(cfg: Optional[FWConfig]):
+    """The active DistSpec, or None outside the distributed backend."""
+    if cfg is not None and cfg.backend == "distributed":
+        if cfg.dist is None:
+            raise ValueError(
+                "backend='distributed' needs cfg.dist (built by "
+                "repro.distributed.driver from the operand's mesh)"
+            )
+        return cfg.dist
+    return None
+
+
+def mdot(a: jax.Array, b: jax.Array, cfg: Optional[FWConfig] = None) -> jax.Array:
+    """Sample-axis dot product, psum-completed over the "data" mesh axis
+    when the distributed backend is active. Oracles MUST use this (and
+    ``msum``) for any reduction over the m axis so their recursions stay
+    correct when the residual/margin is a per-shard slice."""
+    d = jnp.dot(a, b)
+    spec = dist_spec(cfg)
+    return jax.lax.psum(d, spec.data_axis) if spec is not None else d
+
+
+def msum(x: jax.Array, cfg: Optional[FWConfig] = None) -> jax.Array:
+    """Sample-axis sum — the ``mdot`` analogue for elementwise losses."""
+    s = jnp.sum(x)
+    spec = dist_spec(cfg)
+    return jax.lax.psum(s, spec.data_axis) if spec is not None else s
+
+
 def check_matrix_backend(Xt, cfg: FWConfig) -> None:
     """Trace-time guard: the matrix layout and the backend must agree."""
+    if cfg.backend == "distributed":
+        raise ValueError(
+            "backend='distributed' only runs inside the shard_map built by "
+            "repro.distributed.driver (solve / solve_batched / fw_path*); "
+            "the single-device entry points cannot place mesh shards"
+        )
     is_sparse = isinstance(Xt, SparseBlockMatrix)
     if is_sparse and cfg.backend != "sparse":
         raise ValueError(
@@ -84,14 +142,22 @@ def pad_backend_matrix(Xt, cfg: FWConfig):
 # --------------------------------------------------------------------------
 
 
+def sample_blocks(
+    key: jax.Array, nblocks: int, block_size: int, cfg: FWConfig
+) -> jax.Array:
+    """THE aligned-block draw every backend shares: kappa//block_size
+    blocks without replacement, clamped so the request never exceeds the
+    available blocks (choice would otherwise error). Single source of
+    the clamp + draw so the index stream cannot drift between the
+    single-device and distributed backends (engine contract)."""
+    nb = min(max(cfg.kappa // block_size, 1), nblocks)
+    return jax.random.choice(key, nblocks, (nb,), replace=False).astype(jnp.int32)
+
+
 def sample_block_starts(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
-    """Aligned block starts for 'block' sampling, clamped so the number of
-    requested blocks never exceeds the number of available blocks (choice
-    without replacement would otherwise error for kappa//bs > ceil(p/bs))."""
-    bs = cfg.block_size
-    total = -(-p // bs)  # ceil
-    nblocks = min(max(cfg.kappa // bs, 1), total)
-    return jax.random.choice(key, total, (nblocks,), replace=False).astype(jnp.int32)
+    """Aligned block starts for 'block' sampling over a dense feature
+    axis of true size p (geometry from cfg.block_size)."""
+    return sample_blocks(key, -(-p // cfg.block_size), cfg.block_size, cfg)
 
 
 def sample_indices(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
@@ -115,12 +181,9 @@ def sample_indices(key: jax.Array, p: int, cfg: FWConfig) -> jax.Array:
 
 def sample_sparse_blocks(key: jax.Array, mat: SparseBlockMatrix, cfg: FWConfig):
     """Aligned block starts for the sparse backend. Block geometry comes
-    from the MATRIX (cfg.block_size is a dense-kernel knob); the requested
-    count is clamped to the available blocks like sample_block_starts."""
-    nblocks = min(max(cfg.kappa // mat.block_size, 1), mat.nblocks)
-    return jax.random.choice(key, mat.nblocks, (nblocks,), replace=False).astype(
-        jnp.int32
-    )
+    from the MATRIX (cfg.block_size is a dense-kernel knob); same shared
+    clamp + draw as every other backend."""
+    return sample_blocks(key, mat.nblocks, mat.block_size, cfg)
 
 
 # --------------------------------------------------------------------------
@@ -214,6 +277,7 @@ def _sparse_vertex(mat: SparseBlockMatrix, w, key, cfg, extra_fn):
         use_kernel=use_sparse_kernel(cfg),
         interpret=use_interpret(cfg),
         extra_fn=extra_fn,
+        gather_mode=resolve_gather_mode(cfg),
     )
     return i_star, g_raw, g_sel, n_scored
 
@@ -233,6 +297,10 @@ def sample_vertex(
     score, and how many length-m dot products were consumed. With
     ``extra_fn is None`` the two scores are the same array.
     """
+    if cfg.backend == "distributed":
+        from repro.distributed import backend as dist_backend
+
+        return dist_backend.dist_sample_vertex(Xt, w, key, p, cfg, extra_fn)
     if cfg.backend == "sparse":
         return _sparse_vertex(Xt, w, key, cfg, extra_fn)
     if cfg.backend == "pallas":
@@ -252,6 +320,12 @@ def apply_column_update(Xt, v, y_vec, i_star, lam, delta_t, cfg: FWConfig):
     y_vec = 0, delta_t -> -delta_t`` it is the logistic margin recursion
     m <- (1-lam) m + lam delta_t z_star.
     """
+    if cfg.backend == "distributed":
+        from repro.distributed import backend as dist_backend
+
+        return dist_backend.dist_column_update(
+            Xt, v, y_vec, i_star, lam, delta_t, cfg
+        )
     if cfg.backend == "sparse":
         col_vals, col_rows = sparse_ops.sparse_column(Xt, i_star)
         return sparse_ops.sparse_residual_update(
@@ -269,14 +343,40 @@ def apply_column_update(Xt, v, y_vec, i_star, lam, delta_t, cfg: FWConfig):
 def column_dense(Xt, i_star, cfg: FWConfig) -> jax.Array:
     """Dense (m,) column z_star — the logistic bisection needs the whole
     direction vector. Sparse backend scatters the ELL slots (O(nnz_max) +
-    one O(m) zeros init, amortized against the O(m) bisection probes)."""
+    one O(m) zeros init, amortized against the O(m) bisection probes).
+    Distributed: each shard gets its own "data"-slice of the column."""
+    if cfg.backend == "distributed":
+        from repro.distributed import backend as dist_backend
+
+        return dist_backend.dist_column_dense(Xt, i_star, cfg)
     if cfg.backend == "sparse":
         return sparse_ops.sparse_column_dense(Xt, i_star)
     return jax.lax.dynamic_slice_in_dim(Xt, i_star, 1, axis=0)[0]
 
 
-def matvec(Xt, beta: jax.Array) -> jax.Array:
-    """X @ alpha for warm-start initialization, either matrix layout."""
+def matvec(Xt, beta: jax.Array, cfg: Optional[FWConfig] = None) -> jax.Array:
+    """X @ alpha for warm-start initialization, either matrix layout.
+    Distributed: the replicated beta hits the local shard and a psum over
+    "model" completes the local sample-slice of X alpha."""
+    if dist_spec(cfg) is not None:
+        from repro.distributed import backend as dist_backend
+
+        return dist_backend.dist_matvec(Xt, beta, cfg)
     if isinstance(Xt, SparseBlockMatrix):
         return sparse_ops.sparse_matvec(Xt, beta)
     return beta @ Xt
+
+
+def grad_full(Xt, w: jax.Array, cfg: Optional[FWConfig] = None) -> jax.Array:
+    """Full LINEAR gradient -X^T w over every feature — the O(nnz)/O(p*m)
+    certification pass behind the oracle ``gap()`` protocol, never the hot
+    loop. Distributed: local features psum over "data", all_gather over
+    "model" — replicated on every shard. May return backend-padded length;
+    callers slice [:p]."""
+    if dist_spec(cfg) is not None:
+        from repro.distributed import backend as dist_backend
+
+        return dist_backend.dist_grad_full(Xt, w, cfg)
+    if isinstance(Xt, SparseBlockMatrix):
+        return -sparse_ops.sparse_transpose_matvec(Xt, w)
+    return -(Xt @ w)

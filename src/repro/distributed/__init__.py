@@ -1,0 +1,50 @@
+"""Distributed FW subsystem (DESIGN.md §Distributed): mesh-sharded
+sparse/dense design matrices + a shard-aware 'distributed' backend that
+runs the SAME engine hot loop — every oracle, both path drivers, lane
+pruning and all — under one shard_map over a (data, model) mesh.
+
+    mesh = distributed.fw_mesh(n_data=2, n_model=4)
+    op = distributed.shard_sparse(mat, y, mesh)   # or shard_dense /
+                                                  # load_sharded_matrix
+    res = distributed.solve(LASSO, op, cfg, key)
+
+Supersedes the dense-only, lasso-only shard_map loop that used to live
+in ``repro.core.distributed`` (now a deprecation shim).
+"""
+from repro.distributed import backend, driver, shard
+from repro.distributed.driver import (
+    certified_gap,
+    dist_config,
+    fw_path,
+    fw_path_batched,
+    solve,
+    solve_batched,
+    solve_with_history,
+)
+from repro.distributed.shard import (
+    ShardedOperand,
+    fw_mesh,
+    load_sharded_matrix,
+    mesh_spec,
+    shard_dense,
+    shard_sparse,
+)
+
+__all__ = [
+    "ShardedOperand",
+    "backend",
+    "certified_gap",
+    "dist_config",
+    "driver",
+    "fw_mesh",
+    "fw_path",
+    "fw_path_batched",
+    "load_sharded_matrix",
+    "mesh_spec",
+    "shard",
+    "shard_dense",
+    "shard_sparse",
+    "solve",
+    "solve_batched",
+    "solve_with_history",
+]

@@ -1,0 +1,280 @@
+"""Mesh-sharded FW solve drivers (DESIGN.md §Distributed).
+
+ONE shard_map wraps the SAME engine hot loop that serves the
+single-device backends: ``engine.step`` runs verbatim per mesh cell with
+``cfg.backend='distributed'``, so every oracle (lasso / logistic /
+elastic-net), the lane-pruned batched driver, and both regularization-
+path protocols scale to the mesh without a distributed fork of the
+iteration. The only distributed-specific code is (a) the per-shard
+operand reconstruction, (b) the setup collectives (colstats, warm-start
+matvec), and (c) the drivers' entry/exit plumbing — the collectives
+inside the step live in ``repro.distributed.backend`` behind the
+``core.vertex`` dispatch.
+
+Solvers compile once per (mesh, oracle, cfg, geometry, mode): ``delta``
+stays a traced argument, so a whole regularization path — sequential or
+lane-pruned batched — reuses one compiled program, exactly like the
+single-device drivers (§Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import engine, path as path_lib
+from repro.core.engine import ColStats
+from repro.core.solver_config import FWConfig
+from repro.distributed import backend as dbackend
+from repro.distributed.shard import ShardedOperand
+from repro.sparse.matrix import SparseBlockMatrix
+
+
+def dist_config(cfg: FWConfig, op: ShardedOperand) -> FWConfig:
+    """The static config the engine step sees inside the shard_map: the
+    distributed backend plus the operand's mesh vocabulary. The caller's
+    ``backend`` field is irrelevant here — the operand layout decides."""
+    return dataclasses.replace(cfg, backend="distributed", dist=op.spec)
+
+
+def _local_matrix(geom, mat_args):
+    """Rebuild this cell's matrix view from the shard_map-local leaves."""
+    layout, p, m, m_local, p_local, bs, nnz, nb_loc = geom
+    if layout == "dense":
+        return mat_args[0]
+    values_l, rows_l = mat_args
+    return SparseBlockMatrix(
+        values=values_l[0],
+        rows=rows_l[0],
+        p=p_local,  # padded local range; global-p masking is the backend's
+        m=m_local,
+        block_size=bs,
+        nnz_max=nnz,
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _solver(mesh, oracle, cfg: FWConfig, geom, mode: str, warm: bool,
+            n_iters: Optional[int]):
+    """Build + jit the shard_map-wrapped driver for one static key."""
+    spec = cfg.dist
+    layout, p, m, m_local, p_local, bs, nnz, nb_loc = geom
+    da, mo = spec.data_axis, spec.model_axis
+    if layout == "dense":
+        mat_specs = (P(mo, da),)
+    else:
+        mat_specs = (P(da, mo, None, None), P(da, mo, None, None))
+    patience = engine._patience(cfg)
+
+    def _prep(mat_args, y_l):
+        Xt_l = _local_matrix(geom, mat_args)
+        stats = (
+            ColStats(*dbackend.dist_colstats(Xt_l, y_l, cfg, p))
+            if oracle.needs_stats
+            else None
+        )
+        return Xt_l, stats
+
+    def _init(Xt_l, y_l, key, alpha0):
+        return engine.init_state(
+            oracle, Xt_l, y_l, key, alpha0 if warm else None, cfg, p
+        )
+
+    if mode == "solve":
+
+        def body(*args):
+            *mat_args, y_l, key, alpha0, delta = args
+            Xt_l, stats = _prep(mat_args, y_l)
+            state0 = _init(Xt_l, y_l, key, alpha0)
+            final = engine.run_loop(
+                oracle, Xt_l, y_l, stats, state0, cfg, delta, patience
+            )
+            return engine._result(
+                oracle, Xt_l, y_l, stats, final, patience, cfg, delta
+            )
+
+    elif mode == "history":
+
+        def body(*args):
+            *mat_args, y_l, key, alpha0 = args
+            Xt_l, stats = _prep(mat_args, y_l)
+            state0 = _init(Xt_l, y_l, key, alpha0)
+            final, hist = engine.history_loop(
+                oracle, Xt_l, y_l, stats, state0, cfg, n_iters
+            )
+            res = engine._result(
+                oracle, Xt_l, y_l, stats, final, patience, cfg,
+                jnp.asarray(cfg.delta),
+            )
+            return res, hist
+
+    elif mode == "batched":
+
+        def body(*args):
+            *mat_args, y_l, keys, alpha0s, deltas = args
+            Xt_l, stats = _prep(mat_args, y_l)
+            states0 = jax.vmap(lambda k, a0: _init(Xt_l, y_l, k, a0))(
+                keys, alpha0s
+            )
+            final, saved = engine.batched_loop(
+                oracle, Xt_l, y_l, stats, states0, cfg, deltas, patience
+            )
+            res = engine.batched_result(
+                oracle, Xt_l, y_l, stats, final, patience, cfg, deltas
+            )
+            return res, saved
+
+    else:  # pragma: no cover - internal
+        raise ValueError(f"unknown driver mode {mode!r}")
+
+    n_operands = len(mat_specs) + (4 if mode != "history" else 3)
+    in_specs = mat_specs + (P(da),) + (P(),) * (n_operands - len(mat_specs) - 1)
+    mapped = shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False
+    )
+    return jax.jit(mapped)
+
+
+def _alpha0_arr(op: ShardedOperand, alpha0):
+    if alpha0 is None:
+        return jnp.zeros((op.p,), op.dtype)
+    return jnp.asarray(alpha0, op.dtype)
+
+
+def solve(
+    oracle,
+    op: ShardedOperand,
+    cfg: FWConfig,
+    key: jax.Array,
+    alpha0: Optional[jax.Array] = None,
+    delta=None,
+) -> engine.SolveResult:
+    """Distributed twin of ``engine.solve``: same stopping rule, same
+    trajectory contract (uniform sampling replays the single-device
+    index stream; on a 1-data-shard mesh the sparse lasso run is
+    bit-identical). All result leaves come back replicated."""
+    dcfg = dist_config(cfg, op)
+    fn = _solver(op.mesh, oracle, dcfg, op.geom, "solve",
+                 alpha0 is not None, None)
+    delta = jnp.asarray(cfg.delta if delta is None else delta)
+    return fn(*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0), delta)
+
+
+def solve_with_history(
+    oracle,
+    op: ShardedOperand,
+    cfg: FWConfig,
+    key: jax.Array,
+    n_iters: int,
+    alpha0: Optional[jax.Array] = None,
+):
+    """Fixed-iteration distributed run recording the objective per step."""
+    dcfg = dist_config(cfg, op)
+    fn = _solver(op.mesh, oracle, dcfg, op.geom, "history",
+                 alpha0 is not None, int(n_iters))
+    return fn(*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0))
+
+
+def solve_batched(
+    oracle,
+    op: ShardedOperand,
+    cfg: FWConfig,
+    keys: jax.Array,
+    alpha0s: jax.Array,
+    deltas: jax.Array,
+):
+    """Lane-pruned batched solve under ONE shard_map: the engine's
+    masked-lane while_loop runs per mesh cell (collectives vmap over the
+    lane axis), so converged lanes freeze exactly as on one device.
+    Returns ``(batched SolveResult, saved_iters)``."""
+    dcfg = dist_config(cfg, op)
+    fn = _solver(op.mesh, oracle, dcfg, op.geom, "batched", True, None)
+    return fn(*op.matrix_args, op.y, keys, jnp.asarray(alpha0s, op.dtype),
+              jnp.asarray(deltas))
+
+
+def fw_path(
+    op: ShardedOperand,
+    deltas,
+    base_cfg: FWConfig,
+    seed: int = 0,
+    oracle=None,
+    report_gap: bool = True,
+) -> path_lib.PathResult:
+    """Sequential regularization path on the mesh (paper §5 protocol,
+    l1-rescaling warm starts). Certified duality gaps (oracle ``gap()``
+    gradients) ride along by default — ``PathPoint.gap``."""
+    cfg = dataclasses.replace(base_cfg, report_gap=report_gap)
+
+    def solve_fn(oracle_, Xt_, y_, cfg_, key, alpha0, delta):
+        return solve(oracle_, op, cfg_, key, alpha0, delta)
+
+    return path_lib.fw_path(op, op.y, deltas, cfg, seed, oracle,
+                            solve_fn=solve_fn)
+
+
+def fw_path_batched(
+    op: ShardedOperand,
+    deltas,
+    base_cfg: FWConfig,
+    seed: int = 0,
+    lane_width: Optional[int] = None,
+    oracle=None,
+    report_gap: bool = True,
+) -> path_lib.PathResult:
+    """Lane-pruned batched path on the mesh: chunks of deltas solve as
+    lanes of ONE compiled distributed program; converged lanes freeze
+    early and the pruning win reports as ``PathResult.saved_iters``."""
+    cfg = dataclasses.replace(base_cfg, report_gap=report_gap)
+
+    def solve_batched_fn(oracle_, Xt_, y_, cfg_, keys, alpha0s, d_arr):
+        return solve_batched(oracle_, op, cfg_, keys, alpha0s, d_arr)
+
+    return path_lib.fw_path_batched(
+        op, op.y, deltas, cfg, seed, lane_width, oracle,
+        solve_batched_fn=solve_batched_fn,
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def _gap_fn(mesh, oracle, cfg: FWConfig, geom):
+    """Cached jitted shard_map gap program (one compile per static key,
+    like ``_solver`` — alpha and delta stay traced)."""
+    spec = cfg.dist
+
+    def body(*args):
+        *mat_args, y_l, a, d = args
+        Xt_l = _local_matrix(geom, mat_args)
+        return engine.oracle_gap(oracle, Xt_l, y_l, a, d, cfg)
+
+    if geom[0] == "dense":
+        mat_specs = (P(spec.model_axis, spec.data_axis),)
+    else:
+        mat_specs = (
+            P(spec.data_axis, spec.model_axis, None, None),
+        ) * 2
+    mapped = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=mat_specs + (P(spec.data_axis), P(), P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return jax.jit(mapped)
+
+
+def certified_gap(
+    oracle, op: ShardedOperand, alpha: jax.Array, delta, cfg: FWConfig
+) -> jax.Array:
+    """Standalone certified duality gap at ``alpha`` on the mesh (the
+    oracle ``gap()`` protocol run under shard_map)."""
+    dcfg = dist_config(cfg, op)
+    fn = _gap_fn(op.mesh, oracle, dcfg, op.geom)
+    return fn(
+        *op.matrix_args, op.y, jnp.asarray(alpha, op.dtype), jnp.asarray(delta)
+    )

@@ -1,0 +1,347 @@
+"""Mesh placement for the FW design matrix (DESIGN.md §Distributed).
+
+One sharding vocabulary for the whole subsystem, over a 2-D
+("data", "model") mesh:
+
+    dense Xt (p, m)      P(model, data) tiles of (p_local, m_local)
+    sparse block-ELL     per-cell LOCAL SparseBlockMatrix: cell (d, mo)
+                         stores the nonzeros of its feature block-range
+                         that fall in its sample slice, with LOCAL row
+                         indices — laid out as (n_data, n_model * nb_loc,
+                         block_size, nnz_max) arrays sharded
+                         P(data, model, None, None)
+    y (m,)               P(data) slices of m_local
+    beta, ColStats       replicated (O(p) per host)
+
+Feature and sample axes zero-pad up to equal per-shard shapes (the
+§Padding contract: padded features score exactly 0 and are masked out of
+the argmax by global index >= p; padded samples carry y = 0 and all-zero
+matrix entries, so every dot they touch contributes exactly 0 — the
+logistic oracle masks its per-sample loss on y != 0 for the same
+reason). The per-cell nnz budget is the GLOBAL max so all cells share
+one static ELL width; on a 1-data-shard mesh the cells are pure block
+slices of the input matrix — same slots, same order — which is what
+makes uniform-sampling lasso trajectories bit-identical to the
+single-device engine.
+
+``load_sharded_matrix`` maps the coo-npz-v1 row-range shard manifest
+(sparse/io.py) onto mesh coordinates: the data-slice owner of rows
+[d*m_local, (d+1)*m_local) opens ONLY the .npz shards overlapping that
+range (``sparse.io.shards_for_rows``), so a multi-host deployment reads
+each byte exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.solver_config import DistSpec
+from repro.sparse import io as sparse_io
+from repro.sparse.matrix import SparseBlockMatrix
+
+
+def fw_mesh(n_data: int = 1, n_model: Optional[int] = None, devices=None) -> Mesh:
+    """A (data, model) mesh over the available devices. With only
+    ``n_data`` given, "model" absorbs the rest of the device count."""
+    devices = jax.devices() if devices is None else devices
+    if n_model is None:
+        n_model = len(devices) // n_data
+    if n_data * n_model > len(devices):
+        raise ValueError(
+            f"mesh ({n_data}, {n_model}) needs {n_data * n_model} devices, "
+            f"have {len(devices)}"
+        )
+    arr = np.asarray(devices[: n_data * n_model]).reshape(n_data, n_model)
+    return Mesh(arr, ("data", "model"))
+
+
+def mesh_spec(mesh: Mesh) -> DistSpec:
+    """DistSpec from a mesh: axes named data/model map by name; any other
+    2-D mesh maps (first, second) -> (data, model) positionally."""
+    names = tuple(mesh.axis_names)
+    if len(names) != 2:
+        raise ValueError(f"need a 2-D (data, model) mesh, got axes {names}")
+    if set(names) == {"data", "model"}:
+        da, mo = "data", "model"
+    else:
+        da, mo = names
+    return DistSpec(
+        n_data=int(mesh.shape[da]),
+        n_model=int(mesh.shape[mo]),
+        data_axis=da,
+        model_axis=mo,
+    )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedOperand:
+    """A mesh-placed (design matrix, targets) pair plus its static
+    sharding vocabulary — what ``repro.distributed.driver`` solves on.
+
+    Exactly one of the dense (``Xt``) or sparse (``values``/``rows``)
+    layouts is populated. ``p``/``m`` are the TRUE global sizes; the
+    stored arrays carry the padded per-shard geometry described in the
+    module docstring.
+    """
+
+    mesh: Mesh
+    spec: DistSpec
+    p: int
+    m: int
+    m_local: int
+    y: jax.Array  # (n_data * m_local,) sharded P(data)
+    Xt: Optional[jax.Array] = None  # dense (n_model*p_local, n_data*m_local)
+    values: Optional[jax.Array] = None  # (n_data, n_model*nb_loc, bs, nnz)
+    rows: Optional[jax.Array] = None
+    block_size: int = 0
+    nnz_max: int = 0
+    nb_local: int = 0
+
+    # ---- dense-array compatibility surface (path drivers read these) ----
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.p, self.m)
+
+    @property
+    def dtype(self):
+        return self.Xt.dtype if self.Xt is not None else self.values.dtype
+
+    @property
+    def layout(self) -> str:
+        return "dense" if self.Xt is not None else "sparse"
+
+    @property
+    def p_local(self) -> int:
+        if self.Xt is not None:
+            return self.Xt.shape[0] // self.spec.n_model
+        return self.nb_local * self.block_size
+
+    @property
+    def geom(self) -> tuple:
+        """Hashable static-geometry key for the driver's solver cache."""
+        return (
+            self.layout, self.p, self.m, self.m_local, self.p_local,
+            self.block_size, self.nnz_max, self.nb_local,
+        )
+
+    @property
+    def matrix_args(self) -> tuple:
+        return (self.Xt,) if self.Xt is not None else (self.values, self.rows)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _resolve_nnz_budget(counts: np.ndarray, nnz_max: Optional[int]) -> int:
+    """Global per-(cell, feature) ELL budget: default to the densest
+    count; an insufficient explicit budget is a hard error (entries are
+    never silently dropped — the SparseBlockMatrix.from_coo rule)."""
+    required = int(counts.max()) if counts.size else 0
+    if nnz_max is None:
+        nnz_max = max(1, required)
+    elif required > nnz_max:
+        raise ValueError(
+            f"nnz budget {nnz_max} too small: densest (cell, feature) has "
+            f"{required} nonzeros (pass nnz_max>={required})"
+        )
+    return max(1, int(nnz_max))
+
+
+def _place_y(y: np.ndarray, mesh: Mesh, spec: DistSpec, m_local: int) -> jax.Array:
+    y_pad = np.zeros(spec.n_data * m_local, np.asarray(y).dtype)
+    y_pad[: y.shape[0]] = np.asarray(y)
+    return jax.device_put(
+        jnp.asarray(y_pad), NamedSharding(mesh, P(spec.data_axis))
+    )
+
+
+def shard_dense(Xt, y, mesh: Mesh) -> ShardedOperand:
+    """Place a dense feature-major (p, m) matrix: zero-pad both axes to
+    equal per-shard tiles, device_put as P(model, data)."""
+    spec = mesh_spec(mesh)
+    Xt = np.asarray(Xt)
+    p, m = Xt.shape
+    p_loc = _ceil_div(p, spec.n_model)
+    m_loc = _ceil_div(m, spec.n_data)
+    Xt_pad = np.zeros((spec.n_model * p_loc, spec.n_data * m_loc), Xt.dtype)
+    Xt_pad[:p, :m] = Xt
+    Xt_dev = jax.device_put(
+        jnp.asarray(Xt_pad),
+        NamedSharding(mesh, P(spec.model_axis, spec.data_axis)),
+    )
+    return ShardedOperand(
+        mesh=mesh, spec=spec, p=p, m=m, m_local=m_loc,
+        y=_place_y(y, mesh, spec, m_loc), Xt=Xt_dev,
+    )
+
+
+def _place_cells(values, rows, y, mesh, spec, p, m, m_loc, bs, nnz, nb_loc):
+    sharding = NamedSharding(
+        mesh, P(spec.data_axis, spec.model_axis, None, None)
+    )
+    return ShardedOperand(
+        mesh=mesh, spec=spec, p=p, m=m, m_local=m_loc,
+        y=_place_y(y, mesh, spec, m_loc),
+        values=jax.device_put(jnp.asarray(values), sharding),
+        rows=jax.device_put(jnp.asarray(rows), sharding),
+        block_size=bs, nnz_max=nnz, nb_local=nb_loc,
+    )
+
+
+def _assemble_cells(
+    samp: np.ndarray,
+    feat: np.ndarray,
+    vals: np.ndarray,
+    m: int,
+    p: int,
+    spec: DistSpec,
+    block_size: int,
+    nnz_max: Optional[int],
+    dtype,
+):
+    """COO triplets -> per-mesh-cell block-ELL arrays with LOCAL rows.
+
+    Cell (d, mo) receives the entries with ``samp`` in its data slice and
+    ``feat`` in its feature block-range; slot order within a feature is
+    the stable input order (matching ``SparseBlockMatrix.from_coo``).
+    Returns (values, rows, m_local, nb_local, nnz_max) with array shape
+    (n_data, n_model * nb_local * block_size, nnz_max) pre-reshape.
+    """
+    m_loc = _ceil_div(m, spec.n_data)
+    nb_loc = _ceil_div(_ceil_div(p, block_size), spec.n_model)
+    p_cell = nb_loc * block_size
+    n_cells_feat = spec.n_model * p_cell
+    d = samp // m_loc
+    key = d * n_cells_feat + feat  # feat < p <= n_model * p_cell
+    n_keys = spec.n_data * n_cells_feat
+    counts = np.bincount(key, minlength=n_keys)
+    nnz_max = _resolve_nnz_budget(counts, nnz_max)
+    values = np.zeros((spec.n_data, n_cells_feat, nnz_max), dtype)
+    rows_out = np.zeros((spec.n_data, n_cells_feat, nnz_max), np.int32)
+    order = np.argsort(key, kind="stable")
+    k_s = key[order]
+    starts = np.zeros(n_keys + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    slot = np.arange(k_s.size) - starts[k_s]
+    d_s = k_s // n_cells_feat
+    f_s = k_s % n_cells_feat
+    values[d_s, f_s, slot] = vals[order].astype(dtype)
+    rows_out[d_s, f_s, slot] = (samp[order] - d_s * m_loc).astype(np.int32)
+    shape = (spec.n_data, spec.n_model * nb_loc, block_size, nnz_max)
+    return values.reshape(shape), rows_out.reshape(shape), m_loc, nb_loc, nnz_max
+
+
+def shard_sparse(
+    mat: SparseBlockMatrix, y, mesh: Mesh, *, nnz_max: Optional[int] = None
+) -> ShardedOperand:
+    """Place an in-memory SparseBlockMatrix on the mesh.
+
+    With one data shard the cells are pure BLOCK SLICES of the input
+    arrays — identical slots in identical order, preserving bit-level
+    score parity with the single-device engine. With n_data > 1 the
+    nonzeros re-bucket by (sample slice, feature range) through the COO
+    assembler (explicit stored zeros, which carry no information, are
+    dropped).
+    """
+    spec = mesh_spec(mesh)
+    p, m = mat.shape
+    bs = mat.block_size
+    if spec.n_data == 1:
+        # same budget contract as the COO path below: an insufficient
+        # explicit budget is an error, never a silent grow
+        if nnz_max is not None and nnz_max < mat.nnz_max:
+            raise ValueError(
+                f"nnz budget {nnz_max} too small: densest (cell, feature) "
+                f"has {mat.nnz_max} nonzeros (pass nnz_max>={mat.nnz_max})"
+            )
+        nb_loc = _ceil_div(mat.nblocks, spec.n_model)
+        padded = mat.pad_geometry(
+            nblocks=spec.n_model * nb_loc, nnz_max=nnz_max
+        )
+        shape = (1, spec.n_model * nb_loc, bs, padded.nnz_max)
+        return _place_cells(
+            np.asarray(padded.values).reshape(shape),
+            np.asarray(padded.rows).reshape(shape),
+            y, mesh, spec, p, m, m, bs, padded.nnz_max, nb_loc,
+        )
+    vals_np = np.asarray(mat.values).reshape(-1, mat.nnz_max)
+    rows_np = np.asarray(mat.rows).reshape(-1, mat.nnz_max)
+    feat, slot = np.nonzero(vals_np)
+    keep = feat < p
+    feat, slot = feat[keep], slot[keep]
+    values, rows, m_loc, nb_loc, nnz = _assemble_cells(
+        rows_np[feat, slot], feat, vals_np[feat, slot],
+        m, p, spec, bs, nnz_max, np.asarray(mat.values).dtype,
+    )
+    return _place_cells(
+        values, rows, y, mesh, spec, p, m, m_loc, bs, nnz, nb_loc
+    )
+
+
+def load_sharded_matrix(
+    shard_dir,
+    mesh: Mesh,
+    *,
+    block_size: int = 256,
+    nnz_max: Optional[int] = None,
+    dtype=np.float32,
+) -> ShardedOperand:
+    """coo-npz-v1 shard manifest -> mesh-placed operand, reading each
+    data slice's row range through ``sparse.io.iter_shards_for_rows`` —
+    the per-host load path (a host opens only the files overlapping its
+    mesh coordinate's rows). Two streaming passes like
+    ``load_shards_as_matrix``: per-(cell, feature) counts size the global
+    ELL budget, then the fill pass scatters each shard chunk straight
+    into its cell arrays.
+    """
+    spec = mesh_spec(mesh)
+    manifest = sparse_io.read_manifest(shard_dir)
+    m, p = int(manifest["m"]), int(manifest["p"])
+    m_loc = _ceil_div(m, spec.n_data)
+    nb_loc = _ceil_div(_ceil_div(p, block_size), spec.n_model)
+    p_cell = nb_loc * block_size
+    n_cells_feat = spec.n_model * p_cell
+
+    counts = np.zeros(spec.n_data * n_cells_feat, np.int64)
+    y_dtype = np.float32
+    for d in range(spec.n_data):
+        lo, hi = d * m_loc, min(m, (d + 1) * m_loc)
+        for chunk, _ in sparse_io.iter_shards_for_rows(shard_dir, lo, hi):
+            y_dtype = chunk.y.dtype  # preserve the stored target dtype
+            within = (chunk.rows >= lo) & (chunk.rows < hi)
+            counts += np.bincount(
+                d * n_cells_feat + chunk.cols[within],
+                minlength=counts.shape[0],
+            )
+    nnz_max = _resolve_nnz_budget(counts, nnz_max)
+
+    values = np.zeros((spec.n_data, n_cells_feat, nnz_max), dtype)
+    rows_out = np.zeros((spec.n_data, n_cells_feat, nnz_max), np.int32)
+    y = np.zeros(m, y_dtype)
+    cursor = np.zeros(spec.n_data * n_cells_feat, np.int64)
+    for d in range(spec.n_data):
+        lo, hi = d * m_loc, min(m, (d + 1) * m_loc)
+        for chunk, off in sparse_io.iter_shards_for_rows(shard_dir, lo, hi):
+            y[off : off + chunk.y.shape[0]] = chunk.y
+            within = (chunk.rows >= lo) & (chunk.rows < hi)
+            cols = chunk.cols[within]
+            order = np.argsort(cols, kind="stable")
+            cs = cols[order]
+            key = d * n_cells_feat + cs
+            uniq, first, cnt = np.unique(key, return_index=True, return_counts=True)
+            local = np.arange(cs.size) - np.repeat(first, cnt)
+            slot = cursor[key] + local
+            values[d, cs, slot] = chunk.vals[within][order].astype(dtype)
+            rows_out[d, cs, slot] = (chunk.rows[within][order] - lo).astype(np.int32)
+            cursor[uniq] += cnt
+    shape = (spec.n_data, spec.n_model * nb_loc, block_size, nnz_max)
+    return _place_cells(
+        values.reshape(shape), rows_out.reshape(shape),
+        y, mesh, spec, p, m, m_loc, block_size, nnz_max, nb_loc,
+    )

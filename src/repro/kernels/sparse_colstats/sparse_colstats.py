@@ -27,30 +27,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.sparse_grad.sparse_grad import gather_vmem
 
-def _kernel(vals_ref, rows_ref, y_ref, zty_ref, zn2_ref):
+
+def _kernel(vals_ref, rows_ref, y_ref, zty_ref, zn2_ref, *, gather_mode):
     """One feature block: gather y at the stored rows, fused dual reduce."""
     vals = vals_ref[0].astype(jnp.float32)  # (block_size, nnz_max)
     rows = rows_ref[0]  # (block_size, nnz_max) int32
     y = y_ref[0].astype(jnp.float32)  # (m,)
-    gathered = jnp.take(y, rows, axis=0)  # (block_size, nnz_max)
+    gathered = gather_vmem(y, rows, gather_mode)  # (block_size, nnz_max)
     zty_ref[0, :] = jnp.sum(vals * gathered, axis=1)
     zn2_ref[0, :] = jnp.sum(vals * vals, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "gather_mode"))
 def sparse_colstats_fused(
     values: jax.Array,  # (nblocks, block_size, nnz_max)
     rows: jax.Array,  # (nblocks, block_size, nnz_max) int32
     y: jax.Array,  # (m,) targets
     *,
     interpret: bool = False,
+    gather_mode: str = "take",
 ):
     """(zty, znorm2) of padded length nblocks * block_size, f32."""
     nblocks, block_size, nnz_max = values.shape
     m = y.shape[0]
     zty, zn2 = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, gather_mode=gather_mode),
         grid=(nblocks,),
         in_specs=[
             pl.BlockSpec((1, block_size, nnz_max), lambda i: (i, 0, 0)),

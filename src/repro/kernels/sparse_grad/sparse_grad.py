@@ -29,16 +29,38 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(blk_ref, vals_ref, rows_ref, r_ref, out_ref):
+def gather_vmem(vec, rows, gather_mode: str):
+    """Read ``vec[rows]`` inside a kernel: (block_size, nnz_max) values of
+    the VMEM-resident (m,) vector at the stored row indices.
+
+    'take' is the direct gather; 'onehot' rewrites it as a one-hot matmul
+    (rows == iota compare, then MXU dot) — the fallback for TPU targets
+    where the VMEM gather fails to lower. Shared by sparse_grad and
+    sparse_colstats so both kernels survive the same hardware.
+    """
+    if gather_mode == "take":
+        return jnp.take(vec, rows, axis=0)
+    if gather_mode == "onehot":
+        bs, nnz = rows.shape
+        m = vec.shape[0]
+        onehot = (
+            rows.reshape(bs * nnz, 1)
+            == jax.lax.broadcasted_iota(jnp.int32, (bs * nnz, m), 1)
+        ).astype(vec.dtype)
+        return (onehot @ vec).reshape(bs, nnz)
+    raise ValueError(f"unknown gather_mode {gather_mode!r} (take|onehot)")
+
+
+def _kernel(blk_ref, vals_ref, rows_ref, r_ref, out_ref, *, gather_mode):
     """One sampled block: gather residual entries, segment-dot, negate."""
     vals = vals_ref[0].astype(jnp.float32)  # (block_size, nnz_max)
     rows = rows_ref[0]  # (block_size, nnz_max) int32
     r = r_ref[0].astype(jnp.float32)  # (m,)
-    gathered = jnp.take(r, rows, axis=0)  # (block_size, nnz_max)
+    gathered = gather_vmem(r, rows, gather_mode)  # (block_size, nnz_max)
     out_ref[0, :] = -jnp.sum(vals * gathered, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "gather_mode"))
 def sparse_sampled_scores(
     values: jax.Array,  # (nblocks, block_size, nnz_max)
     rows: jax.Array,  # (nblocks, block_size, nnz_max) int32
@@ -46,6 +68,7 @@ def sparse_sampled_scores(
     blk: jax.Array,  # (nb,) int32 sampled block indices
     *,
     interpret: bool = False,
+    gather_mode: str = "take",
 ) -> jax.Array:
     """Scores (nb * block_size,) for the sampled feature blocks."""
     _, block_size, nnz_max = values.shape
@@ -62,7 +85,7 @@ def sparse_sampled_scores(
         out_specs=pl.BlockSpec((1, block_size), lambda i, blk: (i, 0)),
     )
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, gather_mode=gather_mode),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nb, block_size), jnp.float32),
         interpret=interpret,

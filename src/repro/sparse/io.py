@@ -271,8 +271,42 @@ def read_manifest(shard_dir) -> dict:
 def iter_shards(shard_dir) -> Iterator[Tuple[COOData, int]]:
     """Stream (chunk, row_offset) pairs; chunk row ids are GLOBAL."""
     manifest = read_manifest(shard_dir)
+    yield from iter_shards_for_rows(shard_dir, 0, manifest["m"],
+                                    manifest=manifest)
+
+
+def shards_for_rows(manifest: dict, lo: int, hi: int) -> list:
+    """Shard names overlapping the row range [lo, hi) — pure manifest
+    arithmetic (shard k holds rows [k*R, (k+1)*R)), no file IO.
+
+    This is the coo-npz-v1 -> mesh-coordinate mapping the distributed
+    loader uses: a host holding the "data" slice [lo, hi) reads ONLY
+    these files (repro.distributed.shard.load_sharded_matrix).
+    """
+    if manifest.get("format") != SHARD_FORMAT:
+        raise ValueError(f"unknown shard format {manifest.get('format')!r}")
+    R = int(manifest["rows_per_shard"])
+    names = manifest["shards"]
+    lo = max(0, lo)
+    hi = min(int(manifest["m"]), hi)
+    if hi <= lo:
+        return []
+    first = lo // R
+    last = -(-hi // R)  # ceil: shard holding row hi-1, inclusive
+    return names[first:last]
+
+
+def iter_shards_for_rows(
+    shard_dir, lo: int, hi: int, *, manifest: Optional[dict] = None
+) -> Iterator[Tuple[COOData, int]]:
+    """Stream only the shards overlapping rows [lo, hi) (GLOBAL row ids,
+    like ``iter_shards``). The per-mesh-cell read path: a data-slice
+    owner never opens a file outside its row range. ``manifest`` skips
+    the re-read when the caller already holds it."""
+    if manifest is None:
+        manifest = read_manifest(shard_dir)
     p = manifest["p"]
-    for name in manifest["shards"]:
+    for name in shards_for_rows(manifest, lo, hi):
         with np.load(os.path.join(shard_dir, name)) as z:
             off = int(z["row_offset"])
             yield COOData(

@@ -165,6 +165,38 @@ class SparseBlockMatrix:
     def astype(self, dtype) -> "SparseBlockMatrix":
         return dataclasses.replace(self, values=self.values.astype(dtype))
 
+    def pad_geometry(
+        self, *, nblocks: Optional[int] = None, nnz_max: Optional[int] = None
+    ) -> "SparseBlockMatrix":
+        """Grow the storage geometry to (nblocks, block_size, nnz_max)
+        with zero padding — shrink is an error (entries are never
+        dropped). The distributed shard placement uses this to equalize
+        per-cell shapes across the mesh (every shard_map operand must
+        share one static local shape); padded blocks are all-zero
+        features under the standard §Padding contract, padded slots are
+        value-0 row-0 no-ops.
+        """
+        nblocks = self.nblocks if nblocks is None else int(nblocks)
+        nnz_max = self.nnz_max if nnz_max is None else int(nnz_max)
+        if nblocks < self.nblocks or nnz_max < self.nnz_max:
+            raise ValueError(
+                f"pad_geometry cannot shrink ({self.nblocks}, {self.nnz_max})"
+                f" -> ({nblocks}, {nnz_max})"
+            )
+        if nblocks == self.nblocks and nnz_max == self.nnz_max:
+            return self
+        pad = (
+            (0, nblocks - self.nblocks),
+            (0, 0),
+            (0, nnz_max - self.nnz_max),
+        )
+        return dataclasses.replace(
+            self,
+            values=jnp.pad(self.values, pad),
+            rows=jnp.pad(self.rows, pad),
+            nnz_max=nnz_max,
+        )
+
     def density(self) -> float:
         """Structural density: stored-slot fraction of the logical p*m."""
         nnz = int(jnp.sum(self.values != 0))

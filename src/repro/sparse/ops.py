@@ -35,16 +35,20 @@ def sparse_block_scores(
     *,
     use_kernel: bool = False,
     interpret: bool = False,
+    gather_mode: str = "take",
 ) -> jax.Array:
     """FW scores (-z_i^T R) for the features of the sampled blocks.
 
     ``use_kernel`` routes through the Pallas scalar-prefetch kernel
     (``kernels/sparse_grad``); otherwise the pure-XLA oracle runs — the
-    off-TPU production path, not just a test double.
+    off-TPU production path, not just a test double. ``gather_mode``
+    selects the in-kernel residual read ('take' gather vs the 'onehot'
+    matmul fallback); the XLA oracle always gathers.
     """
     if use_kernel:
         return sparse_sampled_scores(
-            mat.values, mat.rows, resid, blk, interpret=interpret
+            mat.values, mat.rows, resid, blk, interpret=interpret,
+            gather_mode=gather_mode,
         )
     return sparse_sampled_scores_ref(mat.values, mat.rows, resid, blk)
 
@@ -57,6 +61,7 @@ def sparse_fw_vertex_general(
     use_kernel: bool = False,
     interpret: bool = False,
     extra_fn: Optional[ExtraFn] = None,
+    gather_mode: str = "take",
 ):
     """(i_star, g_raw, g_sel) over the sampled blocks, masking padding.
 
@@ -70,7 +75,8 @@ def sparse_fw_vertex_general(
     gathers for padded idx >= p, which the mask makes unselectable.
     """
     scores = sparse_block_scores(
-        mat, w, blk, use_kernel=use_kernel, interpret=interpret
+        mat, w, blk, use_kernel=use_kernel, interpret=interpret,
+        gather_mode=gather_mode,
     )
     idx = (
         blk[:, None] * mat.block_size + jnp.arange(mat.block_size)[None, :]
@@ -137,6 +143,7 @@ def sparse_colstats(
     *,
     use_kernel: bool = False,
     interpret: bool = False,
+    gather_mode: str = "take",
 ):
     """One pass over the stored slots: z_i^T y and ||z_i||^2 (paper §4.2).
 
@@ -149,7 +156,8 @@ def sparse_colstats(
     """
     if use_kernel:
         zty_pad, zn2_pad = sparse_colstats_fused(
-            mat.values, mat.rows, y, interpret=interpret
+            mat.values, mat.rows, y, interpret=interpret,
+            gather_mode=gather_mode,
         )
         return (
             zty_pad[: mat.p].astype(mat.dtype),

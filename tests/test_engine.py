@@ -106,7 +106,10 @@ class TestPreRefactorGoldens:
                        max_iters=500, tol=0.0, patience=10**9)
         res = logistic_solve(Xt, y, cfg, rng_key)
         assert int(res.iterations) == 500
-        assert int(res.n_dots) == 31000  # 40 sampled + 20 bisect + 2 per step
+        # 40 sampled + 20 bisect + 2 endpoint + 1 gap-stall dot per step
+        # (pre-refactor golden was 31000 before the sampled-gap stall
+        # statistic added its O(m) dot in PR 4)
+        assert int(res.n_dots) == 31500
         assert int(res.active) == 37
         np.testing.assert_allclose(float(res.objective), 3.0054101943969727, rtol=1e-6)
 
@@ -277,6 +280,101 @@ class TestBatchedPathPruning:
         res = path_lib.fw_path(Xt, y, deltas, cfg, oracle=LOGISTIC)
         objs = [pt.objective for pt in res.points]
         assert objs == sorted(objs, reverse=True)  # loss falls as delta grows
+
+
+class TestOracleGap:
+    """The oracle ``gap()`` protocol (ISSUE 4): certified duality gaps
+    with each oracle's OWN gradient, replacing the lasso-only
+    ``duality_gap`` special case."""
+
+    def test_lasso_gap_matches_legacy_duality_gap(self, small_problem, rng_key):
+        from repro.core import fw_lasso
+        from repro.core.fw_lasso import LASSO as lasso_oracle
+
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=DELTA, kappa=60, max_iters=2000, tol=1e-4)
+        res = fw_solve(Xt, y, cfg, rng_key)
+        state = fw_lasso.init_state(Xt, y, rng_key, alpha0=res.alpha)
+        legacy = float(fw_lasso.duality_gap(Xt, state, DELTA))
+        new = float(lasso_oracle.gap(Xt, y, res.alpha, DELTA))
+        assert abs(new - legacy) <= 1e-6 * max(abs(legacy), 1.0)
+
+    @pytest.mark.parametrize("which", ["logistic", "elasticnet"])
+    def test_extension_gap_bounds_suboptimality(self, small_problem, rng_key, which):
+        """FW duality: f(alpha) - f* <= g(alpha). A long high-accuracy run
+        approximates f*; a short run's certified gap must cover its own
+        suboptimality (each oracle's own gradient — the lasso formula
+        would be wrong here)."""
+        if which == "logistic":
+            Xt, y = _logistic_data()
+            oracle, delta = LOGISTIC, 8.0
+            solve = lambda it, a0=None: logistic_solve(
+                Xt, y, FWConfig(delta=delta, kappa=40, max_iters=it,
+                                tol=0.0, patience=10**9), rng_key, alpha0=a0)
+        else:
+            Xt, y, _ = small_problem
+            oracle, delta = ENOracle(l2=1.0), 30.0
+            solve = lambda it, a0=None: en_solve(
+                Xt, y, FWConfig(delta=delta, kappa=60, max_iters=it,
+                                tol=0.0, patience=10**9), 1.0, rng_key, alpha0=a0)
+        rough = solve(60)
+        ref = solve(6000)
+        gap = float(oracle.gap(Xt, y, rough.alpha, delta))
+        subopt = float(rough.objective) - float(ref.objective)
+        assert gap >= subopt - 1e-5 * max(abs(float(ref.objective)), 1.0)
+        assert gap >= 0.0
+
+    def test_report_gap_rides_solve_and_path(self, small_problem):
+        """FWConfig.report_gap surfaces SolveResult.gap / PathPoint.gap."""
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=DELTA, kappa=60, max_iters=2000, tol=1e-4,
+                       report_gap=True)
+        res = fw_solve(Xt, y, cfg, jax.random.PRNGKey(0))
+        assert res.gap is not None and np.isfinite(float(res.gap))
+        deltas = path_lib.delta_grid(100.0, n_points=4)
+        for driver in (path_lib.fw_path, path_lib.fw_path_batched):
+            pts = driver(Xt, y, deltas, cfg).points
+            assert all(np.isfinite(pt.gap) for pt in pts)
+            # converged grid points certify a noise-level gap
+            assert all(abs(pt.gap) < 1e-4 * abs(pt.objective) for pt in pts)
+        off = FWConfig(delta=DELTA, kappa=60, max_iters=200, tol=1e-4)
+        assert fw_solve(Xt, y, off, jax.random.PRNGKey(0)).gap is None
+
+
+class TestGapStall:
+    """The gap_rtol noise-floor stall wired into the logistic and
+    elastic-net line searches (ISSUE 4 satellite): a warm start from a
+    converged iterate terminates in ~patience iterations instead of
+    micro-oscillating to max_iters."""
+
+    def test_elasticnet_warm_restart_stalls_immediately(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        cfg = FWConfig(delta=30.0, sampling="uniform", kappa=60,
+                       max_iters=4000, tol=1e-6)
+        base = en_solve(Xt, y, cfg, 1.0, rng_key)
+        assert bool(base.converged)
+        warm = en_solve(Xt, y, cfg, 1.0, rng_key, alpha0=base.alpha)
+        assert bool(warm.converged)
+        # a handful of genuine refinement steps (the restart recomputes
+        # the S/F scalars exactly) + the patience-long stall tail — far
+        # from max_iters=4000
+        assert int(warm.iterations) <= 3 * cfg.patience
+
+    def test_logistic_warm_restart_stalls(self, rng_key):
+        rng = np.random.default_rng(0)
+        X = rng.standard_normal((60, 40)).astype(np.float32)
+        w0 = np.zeros(40, np.float32)
+        w0[:3] = rng.standard_normal(3) * 2
+        y = np.sign(X @ w0 + 0.05 * rng.standard_normal(60)).astype(np.float32)
+        y[y == 0] = 1.0
+        Xt, yj = jnp.asarray(X.T.copy()), jnp.asarray(y)
+        cfg = FWConfig(delta=2.0, sampling="uniform", kappa=20,
+                       max_iters=6000, tol=1e-4, gap_rtol=1e-3)
+        base = logistic_solve(Xt, yj, cfg, rng_key)
+        assert bool(base.converged)
+        warm = logistic_solve(Xt, yj, cfg, rng_key, alpha0=base.alpha)
+        assert bool(warm.converged)
+        assert int(warm.iterations) <= int(base.iterations) // 4
 
 
 class TestEngineStructure:

@@ -194,6 +194,55 @@ class TestSparseKernel:
         assert got.dtype == jnp.float32  # f32 accumulation contract
 
 
+class TestGatherMode:
+    """gather_mode='onehot' — the one-hot matmul fallback for TPUs where
+    the in-kernel VMEM ``jnp.take`` fails to lower (ISSUE 4 satellite) —
+    must agree with the 'take' gather in BOTH sparse kernels."""
+
+    @pytest.mark.parametrize("p,m,bs", [(300, 80, 128), (130, 70, 32)])
+    def test_sampled_scores_take_vs_onehot(self, p, m, bs):
+        _, mat, r = _sparse_dense_pair(p, m, 0.05, seed=p, block_size=bs)
+        blk = jnp.arange(mat.nblocks, dtype=jnp.int32)
+        take = sparse_sampled_scores(mat.values, mat.rows, jnp.asarray(r),
+                                     blk, interpret=True, gather_mode="take")
+        onehot = sparse_sampled_scores(mat.values, mat.rows, jnp.asarray(r),
+                                       blk, interpret=True, gather_mode="onehot")
+        np.testing.assert_allclose(np.asarray(take), np.asarray(onehot),
+                                   rtol=1e-6, atol=1e-5)
+
+    def test_colstats_take_vs_onehot(self):
+        _, mat, r = _sparse_dense_pair(130, 70, 0.1, seed=9, block_size=32)
+        y = jnp.asarray(r)
+        z_t, n_t = sops.sparse_colstats(mat, y, use_kernel=True,
+                                        interpret=True, gather_mode="take")
+        z_o, n_o = sops.sparse_colstats(mat, y, use_kernel=True,
+                                        interpret=True, gather_mode="onehot")
+        np.testing.assert_allclose(np.asarray(z_t), np.asarray(z_o),
+                                   rtol=1e-6, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(n_t), np.asarray(n_o),
+                                   rtol=1e-6, atol=1e-5)
+
+    def test_solver_end_to_end_onehot(self, sparse_problem, rng_key):
+        """FWConfig.gather_mode plumbs through the solver hot loop."""
+        _, mat, y = sparse_problem
+        base = dict(delta=DELTA, sampling="block", kappa=128, max_iters=1500,
+                    tol=1e-4, backend="sparse", sparse_kernel=True,
+                    interpret=True)
+        res_t = fw_solve(mat, y, FWConfig(gather_mode="take", **base), rng_key)
+        res_o = fw_solve(mat, y, FWConfig(gather_mode="onehot", **base), rng_key)
+        rel = abs(float(res_o.objective) - float(res_t.objective)) / abs(
+            float(res_t.objective)
+        )
+        assert rel < 1e-4
+
+    def test_unknown_mode_rejected(self):
+        _, mat, r = _sparse_dense_pair(64, 32, 0.2, seed=1, block_size=32)
+        with pytest.raises(ValueError, match="gather_mode"):
+            sparse_sampled_scores(mat.values, mat.rows, jnp.asarray(r),
+                                  jnp.asarray([0], jnp.int32),
+                                  interpret=True, gather_mode="bogus")
+
+
 class TestSolverParity:
     """fw_solve(backend='sparse') == fw_solve(backend='xla') end to end on
     the SAME (sparsified) problem. p=300 is not block-divisible, so the
