@@ -169,6 +169,45 @@ def run(csv: CSV):
     js.add("solver/backend_ratios",
            pallas_over_xla=times["pallas"] / times["xla"],
            sparse_over_xla=times["sparse"] / times["xla"])
+
+    # -- fused multi-step hot loop (ISSUE 5): iterations/sec at K=1/8/32 --
+    # One fixed-iteration uniform-lasso run per (backend, fuse_steps):
+    # K=1 is the per-dispatch baseline (dense-xla-ref / sparse-xla-ref),
+    # K>1 the chunked driver (fori-of-step on these CPU executors; the
+    # megakernel itself is TPU-targeted and timed by its parity tests in
+    # interpret mode). Records land in BENCH_kernels.json as
+    # hotloop/fused_k{K}_{backend} so the perf trajectory is diffable.
+    pf, mf, kf, iters_f = 2048, 256, 128, 192
+    rng_f = np.random.default_rng(3)
+    Xf_np = rng_f.standard_normal((pf, mf)).astype(np.float32)
+    Xf_sp = Xf_np.copy()
+    Xf_sp[rng_f.random((pf, mf)) > 0.01] = 0.0
+    arms_f = {
+        "xla": jnp.asarray(Xf_np),
+        "sparse": SparseBlockMatrix.from_dense(Xf_sp, block_size=128),
+    }
+    yf = jnp.asarray(rng_f.standard_normal(mf).astype(np.float32))
+    keyf = jax.random.PRNGKey(2)
+    base_f = {}
+    for backend, A in arms_f.items():
+        for K in (1, 8, 32):
+            cfg = FWConfig(
+                delta=25.0, sampling="uniform", kappa=kf, max_iters=iters_f,
+                tol=0.0, patience=10**9, backend=backend, fuse_steps=K,
+            )
+            t = _time(lambda cfg=cfg, A=A: fw_solve(A, yf, cfg, keyf).alpha, n=3)
+            ips = iters_f / t
+            if K == 1:
+                base_f[backend] = t
+            tag = f"hotloop/fused_k{K}_{backend}"
+            csv.emit(
+                tag, t * 1e6 / iters_f,
+                f"p={pf};m={mf};kappa={kf};iters={iters_f};"
+                f"iters_per_sec={ips:.0f};speedup_vs_k1={base_f[backend]/t:.2f}x",
+            )
+            js.add(tag, p=pf, m=mf, kappa=kf, iters=iters_f, backend=backend,
+                   fuse_steps=K, seconds=t, us_per_iter=t * 1e6 / iters_f,
+                   iters_per_sec=ips, speedup_vs_k1=base_f[backend] / t)
     js.write()
 
 

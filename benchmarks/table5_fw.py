@@ -98,6 +98,7 @@ def run(csv: CSV, datasets=None):
 
     _run_sparse_section(csv, js)
     _run_family_section(csv, js)
+    _run_fused_section(csv, js)
     _run_distributed_section(csv, js)
     js.write()
 
@@ -221,6 +222,50 @@ def _run_family_section(csv: CSV, js: BenchJSON):
     js.add("table5/family/logistic_sparse_path_batched", m=m, p=p,
            n_points=len(deltas), lane_width=lane_width, seconds=dt_b,
            iters=res_b.total_iters, saved_iters=res_b.saved_iters)
+
+
+def _run_fused_section(csv: CSV, js: BenchJSON):
+    """Fused-vs-unfused (FWConfig.fuse_steps, ISSUE 5) wall time for the
+    SAME regularization path: one sequential ``fw_path`` per K on the
+    dense synthetic dataset and on the sparse text proxy, so the bench
+    trajectory records what K iterations per dispatch buys end to end
+    (chunked stopping may spend up to K-1 extra iterations per grid
+    point — both the time and the iteration counts land in the JSON)."""
+    arms = []
+    Xt, y, _ = load_dataset("synthetic-10000")
+    arms.append(("xla", Xt, y))
+    mat, ys, _ = load_sparse_dataset(SPARSE_BENCH_DATASET, prefer_real=False)
+    arms.append(("sparse", mat, ys))
+    n_pts = max(4, N_POINTS // 4)
+    for backend, A, yv in arms:
+        p, m = A.shape
+        deltas = path_lib.delta_grid(
+            float(jnp.max(jnp.abs(path_lib._xty(A, yv)))) * 0.02, n_points=n_pts
+        )
+        kappa = kappa_fraction(p, 0.01)
+        base = {}
+        for K in (1, 8):
+            cfg = FWConfig(delta=1.0, kappa=kappa, sampling="uniform",
+                           max_iters=20_000, tol=1e-3, backend=backend,
+                           fuse_steps=K)
+            t0 = time.perf_counter()
+            res = path_lib.fw_path(A, yv, deltas, cfg)
+            dt = time.perf_counter() - t0
+            base.setdefault("t", dt)
+            base.setdefault("obj", res.points[-1].objective)
+            obj_rel = abs(res.points[-1].objective - base["obj"]) / max(
+                abs(base["obj"]), 1e-12
+            )
+            tag = f"table5/fused/path_{backend}_k{K}"
+            csv.emit(
+                tag, dt * 1e6 / n_pts,
+                f"m={m};p={p};kappa={kappa};n_points={n_pts};"
+                f"iters={res.total_iters};speedup_vs_k1={base['t']/dt:.2f}x;"
+                f"final_obj_rel_vs_k1={obj_rel:.2e}",
+            )
+            js.add(tag, m=m, p=p, kappa=kappa, n_points=n_pts, backend=backend,
+                   fuse_steps=K, seconds=dt, iters=res.total_iters,
+                   speedup_vs_k1=base["t"] / dt, final_obj_rel_vs_k1=obj_rel)
 
 
 _DIST_SCRIPT = """

@@ -51,6 +51,17 @@ bit-identically across backends); padded coordinates (dense-kernel tail
 rows, sparse tail features, padded ELL slots) score exactly zero and are
 masked out of the argmax, so ``i_star < p`` always; ``beta``, ``stats``
 and results stay at the true p regardless of backend padding.
+
+``FWConfig.fuse_steps = K > 1`` turns both loop drivers into CHUNKED
+drivers (DESIGN.md §Perf/§Stopping): each while_loop turn advances K
+iterations in one dispatch — through the ``kernels/fused_step`` Pallas
+megakernel (co-state and scalar recursions VMEM-resident across all K
+steps) on the kernel backends, or a fori_loop over the unfused ``step``
+elsewhere — and the stall/patience stopping rule is checked between
+chunks (overshoot <= K-1; max_iters stays exact via in-chunk masking).
+The megakernel emits per-step records that ``_fused_replay`` turns into
+the O(p) coefficient updates with the unfused op sequence, keeping the
+fused uniform-lasso trajectory bit-identical to fuse_steps=1.
 """
 from __future__ import annotations
 
@@ -130,12 +141,26 @@ def precompute_colstats(
         )
     else:
         zty = Xt @ y
-        znorm2 = jnp.sum(Xt * Xt, axis=1)
+        # fused row-norm contraction: XLA lowers the einsum to a reduce
+        # without materializing the O(p*m) squared temporary that
+        # ``jnp.sum(Xt * Xt, axis=1)`` pays on the non-pallas path
+        znorm2 = jnp.einsum("pm,pm->p", Xt, Xt)
     return ColStats(zty=zty, znorm2=znorm2, yty=jnp.dot(y, y))
 
 
 def _patience(cfg: FWConfig) -> int:
     return cfg.patience if cfg.sampling != "full" else 1
+
+
+def dot_dtype():
+    """Accounting dtype of the ``n_dots`` counter. int32 overflows at the
+    paper's scale (p = 4M with ``sampling='full'`` wraps after ~500
+    iterations), so the counter is widened: exact int64 when the host
+    enables x64, float32 otherwise — overflow-free and monotone, exact up
+    to 2^24 and magnitude-correct beyond (JAX silently demotes 64-bit
+    dtypes without the x64 flag, so requesting int64 unconditionally
+    would quietly hand back the int32 this replaces)."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.float32
 
 
 def init_state(oracle, Xt, y, key, alpha0=None, cfg=None, p=None) -> EngineState:
@@ -163,10 +188,41 @@ def init_state(oracle, Xt, y, key, alpha0=None, cfg=None, p=None) -> EngineState
         maxabs=maxabs,
         step_inf=jnp.full((), jnp.inf, dtype),
         stall=jnp.zeros((), jnp.int32),
-        n_dots=jnp.zeros((), jnp.int32),
+        n_dots=jnp.zeros((), dot_dtype()),
         k=jnp.zeros((), jnp.int32),
         key=key,
     )
+
+
+def apply_coeff_update(beta, scale, maxabs, stall, a_star, i_star, lam,
+                       delta_t, no_progress, cfg: FWConfig):
+    """Steps 5 + stopping statistics of the FW iteration: the scaled-
+    iterate coefficient update with underflow renorm, and the
+    ||alpha^{k+1}-alpha^k||_inf bound / stall bookkeeping (§Stopping).
+
+    ONE definition shared by the unfused ``step`` and the fused chunk's
+    ``_fused_replay`` — the fused bit-identity contract (DESIGN.md
+    §Perf) depends on the two paths executing this exact op sequence.
+    Returns ``(beta, scale, maxabs, step_inf, stall)``.
+    """
+    one_m = 1.0 - lam
+    new_scale = scale * one_m
+    # renormalize when the scale underflows (rare O(p) event)
+    need_renorm = new_scale < cfg.renorm_threshold
+    beta, scale = jax.lax.cond(
+        need_renorm,
+        lambda b, s: (b * s, jnp.ones((), b.dtype)),
+        lambda b, s: (b, s),
+        beta,
+        new_scale,
+    )
+    beta = beta.at[i_star].add(delta_t * lam / jnp.maximum(scale, cfg.eps_den))
+    # stopping statistic: ||alpha_{k+1} - alpha_k||_inf upper bound
+    alpha_istar_new = scale * beta[i_star]
+    step_inf = lam * jnp.maximum(maxabs, jnp.abs(delta_t - a_star))
+    maxabs = jnp.maximum(one_m * maxabs, jnp.abs(alpha_istar_new))
+    stall = jnp.where((step_inf <= cfg.tol) | no_progress, stall + 1, 0)
+    return beta, scale, maxabs, step_inf, stall
 
 
 def step(oracle, Xt, y, stats, state: EngineState, cfg: FWConfig, delta) -> EngineState:
@@ -197,31 +253,17 @@ def step(oracle, Xt, y, stats, state: EngineState, cfg: FWConfig, delta) -> Engi
         Xt, y, stats, state.co, i_star, g_raw, g_sel, a_star, delta_t, cfg
     )
 
-    # -- step 5: coefficient update in scaled representation ---------------
-    one_m = 1.0 - lam
-    new_scale = state.scale * one_m
-    # renormalize when the scale underflows (rare O(p) event)
-    need_renorm = new_scale < cfg.renorm_threshold
-    beta, scale = jax.lax.cond(
-        need_renorm,
-        lambda b, s: (b * s, jnp.ones((), b.dtype)),
-        lambda b, s: (b, s),
-        state.beta,
-        new_scale,
+    # -- step 5 + §Stopping statistics (shared with the fused replay) ------
+    beta, scale, maxabs, step_inf, stall = apply_coeff_update(
+        state.beta, state.scale, state.maxabs, state.stall, a_star, i_star,
+        lam, delta_t, no_progress, cfg,
     )
-    beta = beta.at[i_star].add(delta_t * lam / jnp.maximum(scale, cfg.eps_den))
 
     # -- step 6: oracle state recursions (eq. 10 / margin + S/F/Q + refresh)
     co = oracle.update_co(
         Xt, y, stats, state.co, beta, scale, i_star, a_star, lam, delta_t,
         state.k, cfg, aux,
     )
-
-    # -- stopping statistic: ||alpha_{k+1} - alpha_k||_inf upper bound ------
-    alpha_istar_new = scale * beta[i_star]
-    step_inf = lam * jnp.maximum(state.maxabs, jnp.abs(delta_t - a_star))
-    maxabs = jnp.maximum(one_m * state.maxabs, jnp.abs(alpha_istar_new))
-    stall = jnp.where((step_inf <= cfg.tol) | no_progress, state.stall + 1, 0)
 
     return EngineState(
         beta=beta,
@@ -234,6 +276,136 @@ def step(oracle, Xt, y, stats, state: EngineState, cfg: FWConfig, delta) -> Engi
         k=state.k + 1,
         key=key,
     )
+
+
+# --------------------------------------------------------------------------
+# Fused multi-step chunks (FWConfig.fuse_steps > 1, DESIGN.md §Perf)
+# --------------------------------------------------------------------------
+
+
+def _fused_streams(oracle, stats, state: EngineState, cfg: FWConfig, p: int):
+    """Pregenerate the chunk's K x kappa uniform index stream — replaying
+    the unfused per-step (split, randint) chain exactly, so the stream
+    stays the same pure function of (key, cfg, p) on every path — plus
+    the pregathered per-coordinate column statistics and (for oracles
+    whose line search needs live alpha values) the chunk-start alpha at
+    the sampled coordinates."""
+
+    def draw(key, _):
+        key, sub = jax.random.split(key)
+        return key, jax.random.randint(sub, (cfg.kappa,), 0, p)
+
+    key_new, idx = jax.lax.scan(draw, state.key, None, length=cfg.fuse_steps)
+    zty_s = jnp.take(stats.zty, idx).astype(jnp.float32)
+    zn2_s = jnp.take(stats.znorm2, idx).astype(jnp.float32)
+    alpha_s = None
+    if oracle.fused_needs_alpha:
+        alpha_s = (state.scale * jnp.take(state.beta, idx)).astype(jnp.float32)
+    return key_new, idx, zty_s, zn2_s, alpha_s
+
+
+def _fused_replay(oracle, state: EngineState, cfg: FWConfig, i_stars, lams,
+                  delta_ts, no_progs):
+    """Replay the kernel's per-step records into the O(p) coefficient
+    updates and the stopping statistics — through the SAME
+    ``apply_coeff_update`` the unfused step runs, which is what keeps
+    the fused lasso trajectory bit-identical to fuse_steps=1. Steps at
+    k >= max_iters are skipped (max_iters never overshoots)."""
+
+    def apply(c, t):
+        beta, scale, maxabs, step_inf, stall, k = c
+        i_star, lam, delta_t = i_stars[t], lams[t], delta_ts[t]
+        a_star = scale * beta[i_star]
+        beta, scale, maxabs, step_inf, stall = apply_coeff_update(
+            beta, scale, maxabs, stall, a_star, i_star, lam, delta_t,
+            no_progs[t], cfg,
+        )
+        return beta, scale, maxabs, step_inf, stall, k + 1
+
+    def body(t, c):
+        return jax.lax.cond(c[5] < cfg.max_iters, lambda: apply(c, t), lambda: c)
+
+    init = (state.beta, state.scale, state.maxabs, state.step_inf,
+            state.stall, state.k)
+    return jax.lax.fori_loop(0, cfg.fuse_steps, body, init)
+
+
+def _fused_kernel_chunk(oracle, Xt_run, y, stats, state: EngineState,
+                        cfg: FWConfig, delta) -> EngineState:
+    """One K-step chunk through the ``kernels/fused_step`` megakernel:
+    pregenerate/pregather the streams, run the K fused iterations with
+    the co-state VMEM-resident, then replay the emitted step records
+    into the coefficient/stopping state."""
+    p = state.beta.shape[0]
+    key_new, idx, zty_s, zn2_s, alpha_s = _fused_streams(
+        oracle, stats, state, cfg, p
+    )
+    resid0, scal0 = oracle.fused_pack_co(state.co)
+    i_stars, lams, delta_ts, no_progs, resid_out, scal_out = (
+        vertex.run_fused_kernel(
+            oracle, Xt_run, y, resid0, scal0, idx, zty_s, zn2_s, alpha_s,
+            state.k, delta, cfg,
+        )
+    )
+    beta, scale, maxabs, step_inf, stall, k_new = _fused_replay(
+        oracle, state, cfg, i_stars, lams, delta_ts, no_progs
+    )
+    co = oracle.fused_unpack_co(resid_out.astype(resid0.dtype), scal_out)
+    if oracle.fused_needs_alpha:
+        # the in-kernel Q recursion has no beta for the periodic exact
+        # refresh; reconcile it at chunk granularity when the chunk
+        # crossed a refresh boundary (drift window <= refresh_every + K)
+        steps = state.k + jnp.arange(cfg.fuse_steps)
+        hit = jnp.any(
+            ((steps % cfg.refresh_every) == cfg.refresh_every - 1)
+            & (steps < cfg.max_iters)
+        )
+        q_exact = jnp.dot(beta, beta) * scale**2
+        co = co._replace(
+            q_norm=jnp.where(hit, q_exact, co.q_norm).astype(co.q_norm.dtype)
+        )
+    n_active = k_new - state.k
+    n_dots = state.n_dots + (
+        n_active * (cfg.kappa + oracle.extra_dots)
+    ).astype(state.n_dots.dtype)
+    return EngineState(
+        beta=beta,
+        scale=scale,
+        co=co,
+        maxabs=maxabs,
+        step_inf=step_inf,
+        stall=stall,
+        n_dots=n_dots,
+        k=k_new,
+        key=key_new,
+    )
+
+
+def _fused_ref_chunk(oracle, Xt_run, y, stats, state: EngineState,
+                     cfg: FWConfig, delta) -> EngineState:
+    """The non-kernel chunk executor: K unfused engine steps under one
+    fori_loop — bit-exact vs fuse_steps=1 by construction. Steps past
+    max_iters are skipped; the §Stopping check is the caller's (between
+    chunks)."""
+
+    def body(t, s):
+        return jax.lax.cond(
+            s.k < cfg.max_iters,
+            lambda st: step(oracle, Xt_run, y, stats, st, cfg, delta),
+            lambda st: st,
+            s,
+        )
+
+    return jax.lax.fori_loop(0, cfg.fuse_steps, body, state)
+
+
+def fused_chunk(oracle, Xt_run, y, stats, state: EngineState, cfg: FWConfig,
+                delta) -> EngineState:
+    """Advance K = cfg.fuse_steps iterations in one dispatch (megakernel
+    on the kernel backends, fori_loop of ``step`` elsewhere)."""
+    if vertex.use_fused_kernel(cfg):
+        return _fused_kernel_chunk(oracle, Xt_run, y, stats, state, cfg, delta)
+    return _fused_ref_chunk(oracle, Xt_run, y, stats, state, cfg, delta)
 
 
 def certified_gap(oracle, Xt, y, co, beta, scale, delta, cfg=None) -> jax.Array:
@@ -271,12 +443,22 @@ def oracle_gap(oracle, Xt, y, alpha, delta, cfg=None) -> jax.Array:
 
 def run_loop(oracle, Xt_run, y, stats, state0, cfg, delta, patience):
     """The sequential while_loop shared by ``solve`` and the distributed
-    driver: step until the §Stopping rule fires or max_iters."""
+    driver: step until the §Stopping rule fires or max_iters.
+
+    With ``cfg.fuse_steps = K > 1`` (and a fusable oracle/sampling mode,
+    ``vertex.fused_supported``) each loop turn advances a K-step fused
+    chunk and the stall/patience rule is only checked BETWEEN chunks, so
+    convergence stops may overshoot by at most K-1 iterations (max_iters
+    stays exact — trailing chunk steps are masked; DESIGN.md §Stopping).
+    """
+    fused = vertex.fused_supported(oracle, cfg)
 
     def cond(state: EngineState):
         return (state.k < cfg.max_iters) & (state.stall < patience)
 
     def body(state: EngineState):
+        if fused:
+            return fused_chunk(oracle, Xt_run, y, stats, state, cfg, delta)
         return step(oracle, Xt_run, y, stats, state, cfg, delta)
 
     return jax.lax.while_loop(cond, body, state0)
@@ -284,7 +466,9 @@ def run_loop(oracle, Xt_run, y, stats, state0, cfg, delta, patience):
 
 def history_loop(oracle, Xt_run, y, stats, state0, cfg, n_iters: int):
     """The fixed-iteration scan shared by ``solve_with_history`` and the
-    distributed driver; returns (final state, per-step objectives)."""
+    distributed driver; returns (final state, per-step objectives).
+    Always per-step (``fuse_steps`` is ignored): the whole point is one
+    objective sample per iteration."""
 
     def body(state, _):
         new = step(oracle, Xt_run, y, stats, state, cfg, jnp.asarray(cfg.delta))
@@ -366,7 +550,22 @@ def _lane_mask(active: jax.Array, leaf: jax.Array) -> jax.Array:
 def batched_loop(oracle, Xt_run, y, stats, states0, cfg, deltas, patience):
     """The lane-pruned while_loop shared by ``solve_batched`` and the
     distributed driver (repro.distributed.driver runs it inside its
-    shard_map with per-shard operands). Returns (final states, saved)."""
+    shard_map with per-shard operands). Returns (final states, saved).
+
+    Under ``cfg.fuse_steps = K > 1`` every loop turn advances each active
+    lane by one K-step chunk (through the XLA reference executor — the
+    lanes already vmap the per-step backend kernels, and chunking them
+    keeps that unchanged while cutting the lane-sync/stopping checks by
+    K); converged lanes freeze at chunk granularity, so per-lane results
+    equal the sequential fused solver's, overshoot <= K-1 included.
+    """
+    fused = vertex.fused_supported(oracle, cfg)
+    chunk_len = cfg.fuse_steps if fused else 1
+
+    def advance(s, d):
+        if fused:
+            return _fused_ref_chunk(oracle, Xt_run, y, stats, s, cfg, d)
+        return step(oracle, Xt_run, y, stats, s, cfg, d)
 
     def lane_active(states):
         return (states.k < cfg.max_iters) & (states.stall < patience)
@@ -378,13 +577,11 @@ def batched_loop(oracle, Xt_run, y, stats, states0, cfg, deltas, patience):
     def body(carry):
         states, saved = carry
         active = lane_active(states)
-        stepped = jax.vmap(
-            lambda s, d: step(oracle, Xt_run, y, stats, s, cfg, d)
-        )(states, deltas)
+        stepped = jax.vmap(advance)(states, deltas)
         merged = jax.tree_util.tree_map(
             lambda n, o: jnp.where(_lane_mask(active, n), n, o), stepped, states
         )
-        return merged, saved + jnp.sum((~active).astype(jnp.int32))
+        return merged, saved + jnp.sum((~active).astype(jnp.int32)) * chunk_len
 
     return jax.lax.while_loop(cond, body, (states0, jnp.zeros((), jnp.int32)))
 

@@ -42,6 +42,38 @@ class ENCo(NamedTuple):
     q_norm: jax.Array  # ||a||^2
 
 
+def en_ls_closed_form(
+    l2, s_quad, f_lin, q_norm, g_x, g_lin, a_star, delta_t, zn2_i, eps_den, gap_rtol
+):
+    """The elastic-net closed-form line search as pure scalar algebra
+    (kernel-composable, see ``fw_lasso.ls_closed_form``): shared by the
+    unfused ``ENOracle.line_search`` and the fused megakernel. Returns
+    ``(lam, no_progress)``; ``num`` is the sampled EN duality gap."""
+    num = s_quad - delta_t * g_x - f_lin + l2 * (q_norm - delta_t * a_star)
+    den = (
+        s_quad - 2.0 * delta_t * g_lin + delta_t**2 * zn2_i
+        + l2 * (q_norm - 2.0 * delta_t * a_star + delta_t**2)
+    )
+    lam = jnp.clip(num / jnp.maximum(den, eps_den), 0.0, 1.0)
+    gap_scale = (
+        s_quad + jnp.abs(f_lin) + jnp.abs(delta_t * g_x)
+        + l2 * (q_norm + jnp.abs(delta_t * a_star))
+    )
+    no_progress = num <= gap_rtol * gap_scale
+    return lam, no_progress
+
+
+def q_recursion(q_norm, lam, delta_t, a_star):
+    """The O(1) Q = ||a||^2 recursion — shared by ``ENOracle.update_co``
+    and the fused megakernel's in-VMEM scalar update."""
+    one_m = 1.0 - lam
+    return (
+        one_m**2 * q_norm
+        + 2.0 * lam * one_m * delta_t * a_star
+        + lam**2 * delta_t**2
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class ENOracle:
     """Problem oracle: elastic-net over the l1 ball, l2 penalty strength
@@ -51,6 +83,12 @@ class ENOracle:
 
     needs_stats = True
     extra_dots = 0
+    # fused multi-step protocol: closed-form line search, but the score
+    # shift / line search need live per-coordinate alpha values, which the
+    # fused chunk reconstructs in alpha space (pregathered chunk-start
+    # values + an in-VMEM correction ledger — DESIGN.md §Perf).
+    fused_kind = "en"
+    fused_needs_alpha = True
 
     def init_co(self, y, v, beta, dtype, cfg=None) -> ENCo:
         if v is None:
@@ -76,44 +114,64 @@ class ENOracle:
     ):
         g_x = g_raw  # X-part of the selected gradient coordinate
         g_lin = g_x + stats.zty[i_star]
-        num = (
-            co.s_quad - delta_t * g_x - co.f_lin
-            + self.l2 * (co.q_norm - delta_t * a_star)
-        )
-        den = (
-            co.s_quad - 2.0 * delta_t * g_lin + delta_t**2 * stats.znorm2[i_star]
-            + self.l2 * (co.q_norm - 2.0 * delta_t * a_star + delta_t**2)
-        )
-        lam = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, 1.0)
         # ``num`` = -(grad^T d) IS the sampled FW duality gap for the
         # elastic-net objective; below the fp32 rounding floor of its own
         # terms the step is noise (gap_rtol stall, DESIGN.md §Stopping) —
         # this is what lets warm-started EN paths stop immediately.
-        gap_scale = (
-            co.s_quad + jnp.abs(co.f_lin) + jnp.abs(delta_t * g_x)
-            + self.l2 * (co.q_norm + jnp.abs(delta_t * a_star))
+        lam, no_progress = en_ls_closed_form(
+            self.l2, co.s_quad, co.f_lin, co.q_norm, g_x, g_lin, a_star,
+            delta_t, stats.znorm2[i_star], cfg.eps_den, cfg.gap_rtol,
         )
-        no_progress = num <= cfg.gap_rtol * gap_scale
         return lam, no_progress, g_lin
 
     def update_co(
         self, Xt, y, stats, co: ENCo, beta, scale, i_star, a_star, lam,
         delta_t, k, cfg, aux,
     ) -> ENCo:
-        one_m = 1.0 - lam
         resid = vertex.apply_column_update(Xt, co.resid, y, i_star, lam, delta_t, cfg)
         s_quad, f_lin, refresh = fw_lasso.sf_update(
             stats, co.s_quad, co.f_lin, resid, y, i_star, lam, delta_t,
             aux, k, cfg,
         )
-        q_norm = (
-            one_m**2 * co.q_norm
-            + 2.0 * lam * one_m * delta_t * a_star
-            + lam**2 * delta_t**2
-        )
+        q_norm = q_recursion(co.q_norm, lam, delta_t, a_star)
         q_exact = jnp.dot(beta, beta) * scale**2
         q_norm = jnp.where(refresh, q_exact, q_norm)
         return ENCo(resid=resid, s_quad=s_quad, f_lin=f_lin, q_norm=q_norm)
+
+    # ---- fused multi-step chunk protocol (DESIGN.md §Perf) -------------
+
+    def fused_score_shift(self, alpha_i):
+        """The +l2 * a_i gradient shift from the reconstructed alpha."""
+        return self.l2 * alpha_i
+
+    def fused_line_search(
+        self, scal, g_raw, g_sel, a_star, delta_t, zty_i, zn2_i, eps_den, gap_rtol
+    ):
+        s_quad, f_lin, q_norm = scal
+        g_lin = g_raw + zty_i
+        lam, no_progress = en_ls_closed_form(
+            self.l2, s_quad, f_lin, q_norm, g_raw, g_lin, a_star,
+            delta_t, zn2_i, eps_den, gap_rtol,
+        )
+        return lam, no_progress, g_lin
+
+    def fused_scalar_update(self, scal, g_lin, a_star, lam, delta_t, zty_i, zn2_i):
+        s_quad, f_lin = fw_lasso.sf_recursion(
+            scal[0], scal[1], g_lin, lam, delta_t, zty_i, zn2_i
+        )
+        return (s_quad, f_lin, q_recursion(scal[2], lam, delta_t, a_star))
+
+    def fused_pack_co(self, co: ENCo):
+        return co.resid, (co.s_quad, co.f_lin, co.q_norm)
+
+    def fused_unpack_co(self, resid, scal) -> ENCo:
+        d = resid.dtype
+        return ENCo(
+            resid=resid,
+            s_quad=scal[0].astype(d),
+            f_lin=scal[1].astype(d),
+            q_norm=scal[2].astype(d),
+        )
 
     def objective(self, y, stats, co: ENCo, cfg=None):
         return (

@@ -54,6 +54,36 @@ class LassoCo(NamedTuple):
     f_lin: jax.Array  # ()  F^k = (X alpha)^T y
 
 
+def ls_closed_form(s_quad, f_lin, g_sel, g_lin, delta_t, zn2_i, eps_den, gap_rtol):
+    """The closed-form exact line search (eq. 8) as pure scalar algebra —
+    the kernel-composable form the fused multi-step megakernel
+    (``kernels/fused_step``) executes with VMEM-resident scalars. The
+    unfused ``LassoOracle.line_search`` routes through the SAME function
+    so the two paths share one jaxpr for the step-size math (the fused
+    bit-exactness contract, DESIGN.md §Perf). Returns
+    ``(lam, no_progress, num)``; ``num`` is the sampled duality gap."""
+    num = s_quad - delta_t * g_sel - f_lin
+    den = s_quad - 2.0 * delta_t * g_lin + delta_t**2 * zn2_i
+    lam = jnp.clip(num / jnp.maximum(den, eps_den), 0.0, 1.0)
+    gap_scale = s_quad + jnp.abs(f_lin) + jnp.abs(delta_t * g_sel)
+    no_progress = num <= gap_rtol * gap_scale
+    return lam, no_progress, num
+
+
+def sf_recursion(s_quad, f_lin, g_lin, lam, delta_t, zty_i, zn2_i):
+    """The O(1) S/F scalar recursions (paper, below eq. 8) on bare
+    per-coordinate statistics — shared verbatim by ``sf_update`` (the
+    unfused oracles) and the fused megakernel's in-VMEM recursion."""
+    one_m = 1.0 - lam
+    s_quad = (
+        one_m**2 * s_quad
+        + 2.0 * delta_t * lam * one_m * g_lin
+        + delta_t**2 * lam**2 * zn2_i
+    )
+    f_lin = one_m * f_lin + delta_t * lam * zty_i
+    return s_quad, f_lin
+
+
 def sf_update(stats, s_quad, f_lin, resid, y, i_star, lam, delta_t, g_lin, k, cfg):
     """S/F scalar recursions (paper, below eq. 8) + the periodic exact
     O(m) refresh from the residual (fp32-drift control, DESIGN.md).
@@ -64,13 +94,10 @@ def sf_update(stats, s_quad, f_lin, resid, y, i_star, lam, delta_t, g_lin, k, cf
     dots run through ``vertex.mdot`` so the recursion completes across
     the "data" mesh axis under the distributed backend.
     """
-    one_m = 1.0 - lam
-    s_quad = (
-        one_m**2 * s_quad
-        + 2.0 * delta_t * lam * one_m * g_lin
-        + delta_t**2 * lam**2 * stats.znorm2[i_star]
+    s_quad, f_lin = sf_recursion(
+        s_quad, f_lin, g_lin, lam, delta_t,
+        stats.zty[i_star], stats.znorm2[i_star],
     )
-    f_lin = one_m * f_lin + delta_t * lam * stats.zty[i_star]
     refresh = (k % cfg.refresh_every) == (cfg.refresh_every - 1)
     v = y - resid
     s_quad = jnp.where(refresh, vertex.mdot(v, v, cfg), s_quad)
@@ -84,6 +111,11 @@ class LassoOracle:
 
     needs_stats = True
     extra_dots = 0
+    # fused multi-step protocol (DESIGN.md §Perf): the closed-form line
+    # search makes K-step chunks kernel-composable; the lasso scores need
+    # no per-coordinate alpha values inside the chunk.
+    fused_kind = "lasso"
+    fused_needs_alpha = False
 
     def init_co(self, y, v, beta, dtype, cfg=None) -> LassoCo:
         if v is None:
@@ -119,11 +151,10 @@ class LassoOracle:
         iterations (``gap_rtol``, DESIGN.md §Stopping).
         """
         g_lin = g_raw + stats.zty[i_star]  # G_{i*} = z_{i*}^T (X alpha)
-        num = co.s_quad - delta_t * g_sel - co.f_lin
-        den = co.s_quad - 2.0 * delta_t * g_lin + delta_t**2 * stats.znorm2[i_star]
-        lam = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, 1.0)
-        gap_scale = co.s_quad + jnp.abs(co.f_lin) + jnp.abs(delta_t * g_sel)
-        no_progress = num <= cfg.gap_rtol * gap_scale
+        lam, no_progress, _ = ls_closed_form(
+            co.s_quad, co.f_lin, g_sel, g_lin, delta_t,
+            stats.znorm2[i_star], cfg.eps_den, cfg.gap_rtol,
+        )
         return lam, no_progress, g_lin
 
     def update_co(
@@ -137,6 +168,45 @@ class LassoOracle:
             aux, k, cfg,
         )
         return LassoCo(resid=resid, s_quad=s_quad, f_lin=f_lin)
+
+    # ---- fused multi-step chunk protocol (DESIGN.md §Perf) -------------
+    # The megakernel (kernels/fused_step) carries the co-state as
+    # (resid, (S, F, Q)) with Q unused by the lasso; the scalar algebra
+    # below is the SAME jaxpr the unfused step runs, so a fused chunk
+    # replays the unfused trajectory bit-identically.
+
+    def fused_score_shift(self, alpha_i):
+        """Per-coordinate selected-score shift from the live alpha value
+        (None: lasso scores are purely linear)."""
+        return None
+
+    def fused_line_search(
+        self, scal, g_raw, g_sel, a_star, delta_t, zty_i, zn2_i, eps_den, gap_rtol
+    ):
+        s_quad, f_lin, _ = scal
+        g_lin = g_raw + zty_i
+        lam, no_progress, _ = ls_closed_form(
+            s_quad, f_lin, g_sel, g_lin, delta_t, zn2_i, eps_den, gap_rtol
+        )
+        return lam, no_progress, g_lin
+
+    def fused_scalar_update(self, scal, g_lin, a_star, lam, delta_t, zty_i, zn2_i):
+        """Pre-refresh recursions on the (S, F, Q) triple; the chunk
+        driver applies the periodic exact S/F refresh on the unfused
+        cadence from the VMEM-resident residual."""
+        s_quad, f_lin = sf_recursion(
+            scal[0], scal[1], g_lin, lam, delta_t, zty_i, zn2_i
+        )
+        return (s_quad, f_lin, scal[2])
+
+    def fused_pack_co(self, co: LassoCo):
+        return co.resid, (co.s_quad, co.f_lin, jnp.zeros_like(co.s_quad))
+
+    def fused_unpack_co(self, resid, scal) -> LassoCo:
+        d = resid.dtype
+        return LassoCo(
+            resid=resid, s_quad=scal[0].astype(d), f_lin=scal[1].astype(d)
+        )
 
     def objective(self, y, stats, co: LassoCo, cfg=None):
         """f(alpha^k) = 1/2 y^T y + 1/2 S^k - F^k (paper eq. 8 block)."""

@@ -56,6 +56,11 @@ class LogisticOracle:
     n_bisect: int = 20
 
     needs_stats = False
+    # no closed-form line search: the O(m)-per-probe bisection cannot run
+    # as fused scalar algebra, so ``FWConfig.fuse_steps`` falls back to
+    # the per-step loop for this oracle (DESIGN.md §Perf).
+    fused_kind = None
+    fused_needs_alpha = False
 
     @property
     def extra_dots(self) -> int:

@@ -59,6 +59,22 @@ class FWConfig:
         the VMEM gather fails to lower — MXU-friendly, O(slots * m)
         compute), or 'auto' (currently 'take'; the knob exists so a
         failing lowering can be routed around without a code change).
+      fuse_steps: K consecutive FW iterations per dispatch (DESIGN.md
+        §Perf). 1 (default) is today's one-launch-per-iteration loop.
+        K > 1 switches ``engine.run_loop``/``batched_loop`` to a chunked
+        driver: the co-state and scalar recursions stay device-resident
+        across K steps (the ``kernels/fused_step`` Pallas megakernel on
+        the 'pallas' and kernel-dispatched 'sparse' backends, a fori_loop
+        over the engine step elsewhere) and the §Stopping rule is checked
+        BETWEEN chunks, so stall/patience stops may overshoot by at most
+        K-1 iterations (max_iters is still exact — trailing chunk steps
+        are masked). Fusion engages for the closed-form line-search
+        oracles (lasso / elastic-net) under 'uniform' sampling, where the
+        K x kappa index stream is a pure function of (key, cfg, p) and
+        can be pregenerated; the logistic oracle's bisection and the
+        other sampling modes fall back to fuse_steps=1 semantics, and the
+        distributed driver forces fuse_steps=1 (single-device-only for
+        now).
       report_gap: compute the certified FW duality gap
         g(alpha) = alpha^T grad + delta*||grad||_inf (oracle ``gap()``
         gradients) at the END of each solve — one O(nnz)/O(p*m) full
@@ -84,6 +100,7 @@ class FWConfig:
     renorm_threshold: float = 1e-6
     gap_rtol: float = 1e-6
     backend: str = "xla"
+    fuse_steps: int = 1
     sparse_kernel: Optional[bool] = None
     gather_mode: str = "auto"
     report_gap: bool = False

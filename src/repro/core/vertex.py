@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.solver_config import FWConfig
+from repro.kernels.fused_step import fused_step as _fused_step
 from repro.kernels.fw_grad.fw_grad import sampled_scores as _sampled_scores_kernel
 from repro.kernels.fw_grad.ops import fw_vertex as _fw_vertex_kernel
 from repro.kernels.padding import pad_rows as _pad_features
@@ -306,6 +307,65 @@ def sample_vertex(
     if cfg.backend == "pallas":
         return _kernel_vertex(Xt, w, key, p, cfg, extra_fn)
     return _xla_vertex(Xt, w, key, p, cfg, extra_fn)
+
+
+# --------------------------------------------------------------------------
+# Fused multi-step chunk dispatch (kernels/fused_step, DESIGN.md §Perf)
+# --------------------------------------------------------------------------
+
+
+def fused_supported(oracle, cfg: FWConfig) -> bool:
+    """Trace-time gate for the chunked K-steps-per-dispatch hot loop.
+
+    Fusion needs (a) ``cfg.fuse_steps > 1``, (b) an oracle with a
+    closed-form line search exposed through the ``fused_*`` protocol
+    (lasso / elastic-net; the logistic bisection falls back to the
+    per-step loop), (c) 'uniform' sampling — the K x kappa index stream
+    must be pregenerable as a pure function of (key, cfg, p) — and
+    (d) a single-device backend (the distributed driver forces
+    fuse_steps=1 for now).
+    """
+    return (
+        cfg.fuse_steps > 1
+        and cfg.sampling == "uniform"
+        and getattr(oracle, "fused_kind", None) is not None
+        and cfg.backend != "distributed"
+    )
+
+
+def use_fused_kernel(cfg: FWConfig) -> bool:
+    """Chunk executor choice: the Pallas megakernel drives the 'pallas'
+    backend and the kernel-dispatched 'sparse' backend; 'xla' and the
+    XLA-gather sparse path chunk through a fori_loop over the unfused
+    engine step (bit-exact by construction)."""
+    if cfg.backend == "pallas":
+        return True
+    return cfg.backend == "sparse" and use_sparse_kernel(cfg)
+
+
+def run_fused_kernel(
+    oracle, Xt, y, resid, scal, idx, zty_s, zn2_s, alpha_s, k0, delta,
+    cfg: FWConfig,
+):
+    """Invoke the fused megakernel on the configured layout. Returns
+    ``(i_star, lam, delta_t, no_progress, resid_out, (S, F, Q))`` — the
+    per-step records the engine replays into beta/scale/stopping state."""
+    kw = dict(
+        oracle=oracle,
+        eps_den=cfg.eps_den,
+        gap_rtol=cfg.gap_rtol,
+        refresh_every=cfg.refresh_every,
+        max_iters=cfg.max_iters,
+        interpret=use_interpret(cfg),
+    )
+    if isinstance(Xt, SparseBlockMatrix):
+        return _fused_step.sparse_fused_chunk(
+            Xt.values, Xt.rows, y, resid, scal, idx, zty_s, zn2_s, alpha_s,
+            k0, delta, gather_mode=resolve_gather_mode(cfg), **kw,
+        )
+    return _fused_step.dense_fused_chunk(
+        Xt, y, resid, scal, idx, zty_s, zn2_s, alpha_s, k0, delta, **kw
+    )
 
 
 # --------------------------------------------------------------------------

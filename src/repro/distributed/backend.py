@@ -219,7 +219,10 @@ def dist_colstats(Xt_l, y_l: jax.Array, cfg: FWConfig, p: int):
         dtype = Xt_l.dtype
     else:
         zty_l = Xt_l @ y_l
-        zn2_l = jnp.sum(Xt_l * Xt_l, axis=1)
+        # same fused einsum as the single-device precompute_colstats — the
+        # bit-identity contract needs identical per-shard rounding (and it
+        # skips the O(p_local * m_local) squared temporary)
+        zn2_l = jnp.einsum("pm,pm->p", Xt_l, Xt_l)
         dtype = Xt_l.dtype
     zty_l = jax.lax.psum(zty_l, spec.data_axis)
     zn2_l = jax.lax.psum(zn2_l, spec.data_axis)

@@ -38,8 +38,15 @@ from repro.sparse.matrix import SparseBlockMatrix
 def dist_config(cfg: FWConfig, op: ShardedOperand) -> FWConfig:
     """The static config the engine step sees inside the shard_map: the
     distributed backend plus the operand's mesh vocabulary. The caller's
-    ``backend`` field is irrelevant here — the operand layout decides."""
-    return dataclasses.replace(cfg, backend="distributed", dist=op.spec)
+    ``backend`` field is irrelevant here — the operand layout decides.
+
+    ``fuse_steps`` is forced to 1: the fused chunk (DESIGN.md §Perf) is
+    single-device-only for now — a per-shard chunk would have to carry
+    the score psum and the winning-column broadcast INSIDE the kernel
+    (K collective rounds per launch), which is a follow-on (ROADMAP)."""
+    return dataclasses.replace(
+        cfg, backend="distributed", dist=op.spec, fuse_steps=1
+    )
 
 
 def _local_matrix(geom, mat_args):

@@ -1,0 +1,17 @@
+"""Fused multi-step FW megakernel: K iterations per launch with the
+co-state and scalar recursions VMEM-resident (DESIGN.md §Perf)."""
+from repro.kernels.fused_step.fused_step import (
+    dense_fused_chunk,
+    sparse_fused_chunk,
+)
+from repro.kernels.fused_step.ref import (
+    dense_fused_chunk_ref,
+    sparse_fused_chunk_ref,
+)
+
+__all__ = [
+    "dense_fused_chunk",
+    "sparse_fused_chunk",
+    "dense_fused_chunk_ref",
+    "sparse_fused_chunk_ref",
+]

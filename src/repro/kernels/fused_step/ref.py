@@ -1,0 +1,140 @@
+"""Pure-XLA reference of the fused K-step chunk (kernels/fused_step).
+
+Mirrors the megakernel's input/output contract — pregenerated index
+stream, pregathered column statistics, chunk-start co-state in, per-step
+records + final co-state out — with plain jnp gathers instead of the
+scalar-prefetched BlockSpec DMA, so kernel-vs-ref parity can be pinned
+without the solver engine in the loop (tests/test_engine.py). The scalar
+algebra comes from the SAME oracle ``fused_*`` methods the kernel
+executes.
+
+Note the engine's own non-kernel fused executor is a fori_loop over the
+unfused ``engine.step`` (bit-exact by construction); this module is the
+kernel-shaped reference, not the production CPU path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _chunk_ref(score_fn, update_fn, oracle, y, resid, scal, idx, zty_s,
+               zn2_s, alpha_s, k0, delta, *, eps_den, gap_rtol,
+               refresh_every, max_iters):
+    K, kappa = idx.shape
+    y = y.astype(jnp.float32)
+    resid = resid.astype(jnp.float32)
+    delta = jnp.asarray(delta, jnp.float32)
+    if alpha_s is None:
+        alpha_s = jnp.zeros((K, kappa), jnp.float32)
+
+    def body(s, carry):
+        resid, scal3, P, ladd, lidx, recs = carry
+        i_stars, lams, delta_ts, no_progs = recs
+        ids = idx[s]
+        raw, ctx = score_fn(ids, resid)  # (kappa,) linear scores -z^T R
+        if oracle.fused_needs_alpha:
+            corr = jnp.sum(
+                jnp.where(lidx[None, :] == ids[:, None], ladd[None, :], 0.0),
+                axis=1,
+            )
+            a = P * alpha_s[s] + corr
+            sel = raw + oracle.fused_score_shift(a)
+        else:
+            a = jnp.zeros_like(raw)
+            sel = raw
+        j = jnp.argmax(jnp.abs(sel))
+        i_star, g_raw, g_sel, a_star = ids[j], raw[j], sel[j], a[j]
+        delta_t = -delta * jnp.sign(g_sel)
+        lam, no_prog, g_lin = oracle.fused_line_search(
+            scal3, g_raw, g_sel, a_star, delta_t, zty_s[s, j], zn2_s[s, j],
+            eps_den, gap_rtol,
+        )
+        k_glob = k0 + s
+        active = k_glob < max_iters
+        one_m = 1.0 - lam
+        new_resid = update_fn(resid, y, ctx, j, lam, delta_t)
+        ns, nf, nq = oracle.fused_scalar_update(
+            scal3, g_lin, a_star, lam, delta_t, zty_s[s, j], zn2_s[s, j]
+        )
+        refresh = (k_glob % refresh_every) == (refresh_every - 1)
+        v = y - new_resid
+        ns = jnp.where(refresh, jnp.dot(v, v), ns)
+        nf = jnp.where(refresh, jnp.dot(v, y), nf)
+        keep = lambda new, old: jnp.where(active, new, old)
+        carry = (
+            keep(new_resid, resid),
+            (keep(ns, scal3[0]), keep(nf, scal3[1]), keep(nq, scal3[2])),
+            keep(P * one_m, P),
+            keep(ladd.at[s].set(lam * delta_t) * jnp.where(
+                jnp.arange(K) == s, 1.0, one_m), ladd),
+            keep(lidx.at[s].set(i_star), lidx),
+            (
+                i_stars.at[s].set(i_star),
+                lams.at[s].set(lam),
+                delta_ts.at[s].set(delta_t),
+                no_progs.at[s].set(no_prog),
+            ),
+        )
+        return carry
+
+    scal3 = tuple(jnp.asarray(x, jnp.float32) for x in scal)
+    recs0 = (
+        jnp.zeros((K,), jnp.int32),
+        jnp.zeros((K,), jnp.float32),
+        jnp.zeros((K,), jnp.float32),
+        jnp.zeros((K,), jnp.bool_),
+    )
+    carry = (
+        resid,
+        scal3,
+        jnp.ones((), jnp.float32),
+        jnp.zeros((K,), jnp.float32),
+        jnp.full((K,), -1, jnp.int32),
+        recs0,
+    )
+    resid, scal3, _, _, _, recs = jax.lax.fori_loop(0, K, body, carry)
+    i_stars, lams, delta_ts, no_progs = recs
+    return i_stars, lams, delta_ts, no_progs, resid, scal3
+
+
+def dense_fused_chunk_ref(Xt, y, resid, scal, idx, zty_s, zn2_s, alpha_s,
+                          k0, delta, *, oracle, eps_den, gap_rtol,
+                          refresh_every, max_iters, **_):
+    """XLA mirror of ``fused_step.dense_fused_chunk`` (same returns)."""
+
+    def score(ids, r):
+        rows = jnp.take(Xt, ids, axis=0).astype(jnp.float32)  # (kappa, m)
+        return -(rows @ r), rows
+
+    def update(r, yv, rows, j, lam, delta_t):
+        return (1.0 - lam) * r + lam * (yv - delta_t * rows[j])
+
+    return _chunk_ref(score, update, oracle, y, resid, scal, idx, zty_s,
+                      zn2_s, alpha_s, k0, delta, eps_den=eps_den,
+                      gap_rtol=gap_rtol, refresh_every=refresh_every,
+                      max_iters=max_iters)
+
+
+def sparse_fused_chunk_ref(values, rows, y, resid, scal, idx, zty_s, zn2_s,
+                           alpha_s, k0, delta, *, oracle, eps_den, gap_rtol,
+                           refresh_every, max_iters, **_):
+    """XLA mirror of ``fused_step.sparse_fused_chunk`` over the block-ELL
+    slot arrays (same returns)."""
+    bs = values.shape[1]
+
+    def score(ids, r):
+        vals = values[ids // bs, ids % bs].astype(jnp.float32)  # (kappa, nnz)
+        rws = rows[ids // bs, ids % bs]
+        raw = -jnp.sum(vals * jnp.take(r, rws, axis=0), axis=1)
+        return raw, (vals, rws)
+
+    def update(r, yv, ctx, j, lam, delta_t):
+        vals, rws = ctx
+        out = (1.0 - lam) * r + lam * yv
+        return out.at[rws[j]].add((-lam * delta_t) * vals[j])
+
+    return _chunk_ref(score, update, oracle, y, resid, scal, idx, zty_s,
+                      zn2_s, alpha_s, k0, delta, eps_den=eps_den,
+                      gap_rtol=gap_rtol, refresh_every=refresh_every,
+                      max_iters=max_iters)
