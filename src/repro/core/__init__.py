@@ -17,7 +17,15 @@ from repro.core.fw_lasso import (
 from repro.core.fw_logistic import LOGISTIC, LogisticOracle, logistic_solve
 from repro.core.fw_elasticnet import ENOracle, en_solve
 from repro.core.solver_config import CDConfig, FISTAConfig, FWConfig
-from repro.core import baselines, engine, path, projections, sampling, vertex
+from repro.core import (
+    baselines,
+    engine,
+    path,
+    projections,
+    sampling,
+    step_rule,
+    vertex,
+)
 
 __all__ = [
     "ColStats",
@@ -47,5 +55,6 @@ __all__ = [
     "path",
     "projections",
     "sampling",
+    "step_rule",
     "vertex",
 ]

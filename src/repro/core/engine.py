@@ -99,6 +99,10 @@ class EngineState(NamedTuple):
     n_dots: jax.Array  # ()  length-m dot products consumed so far
     k: jax.Array  # ()  iteration counter
     key: jax.Array  # PRNG key
+    # step-rule-owned pytree slot (DESIGN.md §StepRule): () for classic,
+    # the active-set buffer for away/pairwise, (alpha_prev, X alpha_prev)
+    # for partan, (winner cache, phi) for lazy
+    rule: Any = ()
 
 
 class SolveResult(NamedTuple):
@@ -110,6 +114,11 @@ class SolveResult(NamedTuple):
     converged: jax.Array
     # certified FW duality gap at alpha (cfg.report_gap; None otherwise)
     gap: Optional[jax.Array] = None
+    # iterations actually advanced per dispatch: cfg.fuse_steps when the
+    # fused chunk engaged, else 1 (the distributed driver forces 1, and
+    # non-classic step rules / non-fusable oracles fall back) — callers
+    # can tell what actually ran without re-deriving the gating
+    effective_fuse_steps: Optional[jax.Array] = None
 
 
 def precompute_colstats(
@@ -181,16 +190,26 @@ def init_state(oracle, Xt, y, key, alpha0=None, cfg=None, p=None) -> EngineState
         beta = alpha0.astype(dtype)
         v = vertex.matvec(Xt, beta, cfg)  # X alpha, O(nnz) sparse
         maxabs = jnp.max(jnp.abs(beta))
+    co = oracle.init_co(y, v, beta, dtype, cfg)
+    rule_state: Any = ()
+    if cfg is not None and cfg.step_rule != "classic":
+        # lazy import: the rules layer on top of the engine (§StepRule)
+        from repro.core import step_rule as step_rule_lib
+
+        rule_state = step_rule_lib.get_rule(cfg).init_state(
+            oracle, cfg, beta, co, y
+        )
     return EngineState(
         beta=beta,
         scale=jnp.ones((), dtype),
-        co=oracle.init_co(y, v, beta, dtype, cfg),
+        co=co,
         maxabs=maxabs,
         step_inf=jnp.full((), jnp.inf, dtype),
         stall=jnp.zeros((), jnp.int32),
         n_dots=jnp.zeros((), dot_dtype()),
         k=jnp.zeros((), jnp.int32),
         key=key,
+        rule=rule_state,
     )
 
 
@@ -275,6 +294,24 @@ def step(oracle, Xt, y, stats, state: EngineState, cfg: FWConfig, delta) -> Engi
         n_dots=state.n_dots + n_scored + oracle.extra_dots,
         k=state.k + 1,
         key=key,
+        rule=state.rule,
+    )
+
+
+def rule_step(oracle, Xt, y, stats, state: EngineState, cfg: FWConfig,
+              delta) -> EngineState:
+    """One iteration under the configured step rule (DESIGN.md §StepRule).
+
+    ``classic`` IS ``step`` — same function, same jaxpr, so the default
+    trajectory stays bit-identical to the pre-rule engine. The other
+    rules dispatch through ``core.step_rule`` (lazy import: the rules
+    layer on top of the engine and would otherwise cycle)."""
+    if cfg is None or cfg.step_rule == "classic":
+        return step(oracle, Xt, y, stats, state, cfg, delta)
+    from repro.core import step_rule as step_rule_lib
+
+    return step_rule_lib.get_rule(cfg).step(
+        oracle, Xt, y, stats, state, cfg, delta
     )
 
 
@@ -378,6 +415,7 @@ def _fused_kernel_chunk(oracle, Xt_run, y, stats, state: EngineState,
         n_dots=n_dots,
         k=k_new,
         key=key_new,
+        rule=state.rule,
     )
 
 
@@ -459,7 +497,7 @@ def run_loop(oracle, Xt_run, y, stats, state0, cfg, delta, patience):
     def body(state: EngineState):
         if fused:
             return fused_chunk(oracle, Xt_run, y, stats, state, cfg, delta)
-        return step(oracle, Xt_run, y, stats, state, cfg, delta)
+        return rule_step(oracle, Xt_run, y, stats, state, cfg, delta)
 
     return jax.lax.while_loop(cond, body, state0)
 
@@ -471,10 +509,22 @@ def history_loop(oracle, Xt_run, y, stats, state0, cfg, n_iters: int):
     objective sample per iteration."""
 
     def body(state, _):
-        new = step(oracle, Xt_run, y, stats, state, cfg, jnp.asarray(cfg.delta))
+        new = rule_step(
+            oracle, Xt_run, y, stats, state, cfg, jnp.asarray(cfg.delta)
+        )
         return new, oracle.objective(y, stats, new.co, cfg)
 
     return jax.lax.scan(body, state0, None, length=n_iters)
+
+
+def _effective_fuse_steps(oracle, cfg) -> int:
+    """What one loop dispatch actually advances: cfg.fuse_steps when the
+    fused chunk engages (``vertex.fused_supported``), else 1 — surfaced
+    on SolveResult so callers can tell what ran (the distributed driver
+    forces 1; non-classic rules / bisection oracles fall back)."""
+    if cfg is None:
+        return 1
+    return cfg.fuse_steps if vertex.fused_supported(oracle, cfg) else 1
 
 
 def _result(
@@ -494,6 +544,9 @@ def _result(
         active=jnp.sum(alpha != 0.0),
         converged=final.stall >= patience,
         gap=gap,
+        effective_fuse_steps=jnp.asarray(
+            _effective_fuse_steps(oracle, cfg), jnp.int32
+        ),
     )
 
 
@@ -565,7 +618,7 @@ def batched_loop(oracle, Xt_run, y, stats, states0, cfg, deltas, patience):
     def advance(s, d):
         if fused:
             return _fused_ref_chunk(oracle, Xt_run, y, stats, s, cfg, d)
-        return step(oracle, Xt_run, y, stats, s, cfg, d)
+        return rule_step(oracle, Xt_run, y, stats, s, cfg, d)
 
     def lane_active(states):
         return (states.k < cfg.max_iters) & (states.stall < patience)
@@ -604,6 +657,9 @@ def batched_result(oracle, Xt_run, y, stats, final, patience, cfg, deltas):
         active=jnp.sum(alpha != 0.0, axis=1),
         converged=final.stall >= patience,
         gap=gap,
+        effective_fuse_steps=jnp.asarray(
+            _effective_fuse_steps(oracle, cfg), jnp.int32
+        ),
     )
 
 

@@ -138,6 +138,83 @@ class ENOracle:
         q_norm = jnp.where(refresh, q_exact, q_norm)
         return ENCo(resid=resid, s_quad=s_quad, f_lin=f_lin, q_norm=q_norm)
 
+    # ---- generalized direction protocol (DESIGN.md §StepRule) ----------
+    # Same structure as the lasso's (d = t*alpha + df*e_f + da*e_a; see
+    # fw_lasso) with the l2 terms layered on: <grad, alpha> gains +l2*Q,
+    # the denominator gains l2*||d||^2 (pure scalar algebra in Q and the
+    # per-coordinate alpha values carried on the DirStep), and Q gets the
+    # generalized recursion. The selected scores already include the
+    # +l2*a_i shift (score_extra / score_indices), so num needs no extra
+    # l2 bookkeeping beyond the alpha-quadratic term.
+
+    def co_linpred(self, co: ENCo, y):
+        return y - co.resid
+
+    def grad_dot_alpha(self, co: ENCo, stats, y, beta, scale, cfg):
+        return co.s_quad - co.f_lin + self.l2 * co.q_norm
+
+    def dir_line_search(self, y, stats, co: ENCo, ds, u_lin, cfg):
+        v = y - co.resid
+        vu = vertex.mdot(v, u_lin, cfg)
+        uu = vertex.mdot(u_lin, u_lin, cfg)
+        ga = co.s_quad - co.f_lin + self.l2 * co.q_norm
+        num = -(ds.t * ga + ds.df * ds.sel_f + ds.da * ds.sel_a)
+        # ||d||^2 = t^2 Q + 2t(df a_f + da a_a) + df^2 + da^2 + 2 df da [f==a]
+        d2 = (
+            ds.t**2 * co.q_norm
+            + 2.0 * ds.t * (ds.df * ds.a_f + ds.da * ds.a_a)
+            + ds.df**2 + ds.da**2 + 2.0 * ds.df * ds.da * ds.same
+        )
+        den = ds.t**2 * co.s_quad + 2.0 * ds.t * vu + uu + self.l2 * d2
+        g = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, ds.g_max)
+        gap_scale = (
+            jnp.abs(ds.t) * (co.s_quad + jnp.abs(co.f_lin) + self.l2 * co.q_norm)
+            + jnp.abs(ds.df * ds.sel_f)
+            + jnp.abs(ds.da * ds.sel_a)
+        )
+        no_progress = num <= cfg.gap_rtol * gap_scale
+        return g, no_progress, (vu, uu)
+
+    def dir_update_co(
+        self, Xt, y, stats, co: ENCo, beta, scale, ds, g, u_lin, k, cfg, aux
+    ) -> ENCo:
+        vu, uu = aux
+        gt = g * ds.t
+        one_gt = 1.0 + gt
+        resid = one_gt * co.resid - gt * y - g * u_lin
+        s_quad = one_gt**2 * co.s_quad + 2.0 * one_gt * g * vu + g**2 * uu
+        f_lin = one_gt * co.f_lin + g * vertex.mdot(u_lin, y, cfg)
+        atom2 = ds.df**2 + ds.da**2 + 2.0 * ds.df * ds.da * ds.same
+        q_norm = (
+            one_gt**2 * co.q_norm
+            + 2.0 * one_gt * g * (ds.df * ds.a_f + ds.da * ds.a_a)
+            + g**2 * atom2
+        )
+        refresh = (k % cfg.refresh_every) == (cfg.refresh_every - 1)
+        v = y - resid
+        s_quad = jnp.where(refresh, vertex.mdot(v, v, cfg), s_quad)
+        f_lin = jnp.where(refresh, vertex.mdot(v, y, cfg), f_lin)
+        q_norm = jnp.where(refresh, jnp.dot(beta, beta) * scale**2, q_norm)
+        return ENCo(resid=resid, s_quad=s_quad, f_lin=f_lin, q_norm=q_norm)
+
+    # ---- PARTAN extrapolation protocol (DESIGN.md §StepRule) -----------
+
+    def partan_mu(self, y, stats, co: ENCo, u_m, a_mid, dp, mu_max, cfg):
+        """mu* = (<R,u> - l2 <a_mid, dp>) / (||u||^2 + l2 ||dp||^2)."""
+        num = vertex.mdot(co.resid, u_m, cfg) - self.l2 * jnp.dot(a_mid, dp)
+        den = vertex.mdot(u_m, u_m, cfg) + self.l2 * jnp.dot(dp, dp)
+        return jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, mu_max)
+
+    def partan_update_co(self, y, stats, co: ENCo, a_new, mu, u_m, cfg):
+        resid = co.resid - mu * u_m
+        v = y - resid
+        return ENCo(
+            resid=resid,
+            s_quad=vertex.mdot(v, v, cfg),
+            f_lin=vertex.mdot(v, y, cfg),
+            q_norm=jnp.dot(a_new, a_new),
+        )
+
     # ---- fused multi-step chunk protocol (DESIGN.md §Perf) -------------
 
     def fused_score_shift(self, alpha_i):

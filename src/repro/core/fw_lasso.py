@@ -169,6 +169,80 @@ class LassoOracle:
         )
         return LassoCo(resid=resid, s_quad=s_quad, f_lin=f_lin)
 
+    # ---- generalized direction protocol (DESIGN.md §StepRule) ----------
+    # The away/pairwise step rules move along d = t*alpha + df*e_f +
+    # da*e_a (classic FW is t=-1/da=0, away t=+1/df=0, pairwise t=0).
+    # The line search stays closed-form: with u = df*z_f + da*z_a the
+    # direction's image is X d = t*(X alpha) + u, so the quadratic
+    # num/den needs only the tracked S/F scalars plus O(m) dots on u
+    # (``vertex.mdot`` — distributed-correct by construction).
+
+    def co_linpred(self, co: LassoCo, y):
+        """X alpha from the co-state (O(m), no matvec)."""
+        return y - co.resid
+
+    def grad_dot_alpha(self, co: LassoCo, stats, y, beta, scale, cfg):
+        """<grad, alpha> = S - F for grad = -X^T R."""
+        return co.s_quad - co.f_lin
+
+    def dir_line_search(self, y, stats, co: LassoCo, ds, u_lin, cfg):
+        """Exact step along the generalized direction: minimize
+        1/2 ||X(alpha + g d) - y||^2 over g in [0, g_max]. ``num`` is
+        -<grad, d>, the directional FW gap (== eq. 8's numerator on the
+        classic direction); the gap_rtol noise-floor stall rule carries
+        over unchanged (DESIGN.md §Stopping)."""
+        v = y - co.resid
+        vu = vertex.mdot(v, u_lin, cfg)
+        uu = vertex.mdot(u_lin, u_lin, cfg)
+        ga = co.s_quad - co.f_lin
+        num = -(ds.t * ga + ds.df * ds.sel_f + ds.da * ds.sel_a)
+        den = ds.t**2 * co.s_quad + 2.0 * ds.t * vu + uu
+        g = jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, ds.g_max)
+        gap_scale = (
+            jnp.abs(ds.t) * (co.s_quad + jnp.abs(co.f_lin))
+            + jnp.abs(ds.df * ds.sel_f)
+            + jnp.abs(ds.da * ds.sel_a)
+        )
+        no_progress = num <= cfg.gap_rtol * gap_scale
+        return g, no_progress, (vu, uu)
+
+    def dir_update_co(
+        self, Xt, y, stats, co: LassoCo, beta, scale, ds, g, u_lin, k, cfg, aux
+    ) -> LassoCo:
+        """R' = (1+gt) R - gt y - g u and the S/F recursions for the
+        generalized step, with the classic periodic exact refresh."""
+        vu, uu = aux
+        gt = g * ds.t
+        one_gt = 1.0 + gt
+        resid = one_gt * co.resid - gt * y - g * u_lin
+        s_quad = one_gt**2 * co.s_quad + 2.0 * one_gt * g * vu + g**2 * uu
+        f_lin = one_gt * co.f_lin + g * vertex.mdot(u_lin, y, cfg)
+        refresh = (k % cfg.refresh_every) == (cfg.refresh_every - 1)
+        v = y - resid
+        s_quad = jnp.where(refresh, vertex.mdot(v, v, cfg), s_quad)
+        f_lin = jnp.where(refresh, vertex.mdot(v, y, cfg), f_lin)
+        return LassoCo(resid=resid, s_quad=s_quad, f_lin=f_lin)
+
+    # ---- PARTAN extrapolation protocol (DESIGN.md §StepRule) -----------
+
+    def partan_mu(self, y, stats, co: LassoCo, u_m, a_mid, dp, mu_max, cfg):
+        """Closed-form extrapolation step: minimize
+        1/2 ||mu u - R_mid||^2 (u = X dp) over mu in [0, mu_max]."""
+        num = vertex.mdot(co.resid, u_m, cfg)
+        den = vertex.mdot(u_m, u_m, cfg)
+        return jnp.clip(num / jnp.maximum(den, cfg.eps_den), 0.0, mu_max)
+
+    def partan_update_co(self, y, stats, co: LassoCo, a_new, mu, u_m, cfg):
+        """R' = R_mid - mu u; S/F recomputed exactly (two O(m) dots per
+        step — PARTAN is already O(p) per step, recursions buy nothing)."""
+        resid = co.resid - mu * u_m
+        v = y - resid
+        return LassoCo(
+            resid=resid,
+            s_quad=vertex.mdot(v, v, cfg),
+            f_lin=vertex.mdot(v, y, cfg),
+        )
+
     # ---- fused multi-step chunk protocol (DESIGN.md §Perf) -------------
     # The megakernel (kernels/fused_step) carries the co-state as
     # (resid, (S, F, Q)) with Q unused by the lasso; the scalar algebra

@@ -122,6 +122,73 @@ class LogisticOracle:
     ) -> LogisticCo:
         return LogisticCo(margin=co.margin + lam * aux)
 
+    # ---- generalized direction protocol (DESIGN.md §StepRule) ----------
+    # Along d = t*alpha + df*e_f + da*e_a the margin moves on the RAY
+    # m(g) = m + g*u with u = t*m + df*z_f + da*z_a fixed, so the same
+    # monotone-phi' bisection runs on [0, g_max] (away/pairwise clip)
+    # instead of the classic [0, 1] segment.
+
+    def co_linpred(self, co: LogisticCo, y):
+        return co.margin
+
+    def grad_dot_alpha(self, co: LogisticCo, stats, y, beta, scale, cfg):
+        """alpha^T grad_alpha = margin^T grad_margin (grad_alpha = X^T g_m)
+        — one O(m) dot, no full-gradient pass."""
+        grad_m = -y * jax.nn.sigmoid(-y * co.margin)
+        return vertex.mdot(co.margin, grad_m, cfg)
+
+    def _bisect_ray(self, y, m0, u, g_max, cfg):
+        """Monotone bisection for argmin_g sum log(1+exp(-y (m0 + g u)))
+        on [0, g_max] (phi'(g) = <grad_m(m0 + g u), u> is increasing)."""
+
+        def phi_prime(g):
+            mg = m0 + g * u
+            return vertex.mdot(-y * jax.nn.sigmoid(-y * mg), u, cfg)
+
+        def body(_, ab):
+            a, b = ab
+            mid = 0.5 * (a + b)
+            going_up = phi_prime(mid) > 0
+            return jnp.where(going_up, a, mid), jnp.where(going_up, mid, b)
+
+        a, b = jax.lax.fori_loop(
+            0, self.n_bisect, body, (jnp.zeros(()), g_max * jnp.ones(()))
+        )
+        g = 0.5 * (a + b)
+        g = jnp.where(phi_prime(g_max) <= 0, g_max, g)
+        g = jnp.where(phi_prime(jnp.zeros(())) >= 0, 0.0, g)
+        return g
+
+    def dir_line_search(self, y, stats, co: LogisticCo, ds, u_lin, cfg):
+        u = ds.t * co.margin + u_lin
+        g = self._bisect_ray(y, co.margin, u, ds.g_max, cfg)
+        # directional FW gap -<grad, d> = -<grad_m, u> at g = 0; below
+        # the fp32 noise floor of its own terms the step is a stall
+        # (gap_rtol rule, DESIGN.md §Stopping)
+        grad_m = -y * jax.nn.sigmoid(-y * co.margin)
+        num = -vertex.mdot(grad_m, u, cfg)
+        a_grad = vertex.mdot(co.margin, grad_m, cfg)
+        gap_scale = (
+            jnp.abs(ds.t) * jnp.abs(a_grad)
+            + jnp.abs(ds.df * ds.sel_f)
+            + jnp.abs(ds.da * ds.sel_a)
+        )
+        no_progress = num <= cfg.gap_rtol * gap_scale
+        return g, no_progress, u
+
+    def dir_update_co(
+        self, Xt, y, stats, co: LogisticCo, beta, scale, ds, g, u_lin, k, cfg, aux
+    ) -> LogisticCo:
+        return LogisticCo(margin=co.margin + g * aux)
+
+    # ---- PARTAN extrapolation protocol (DESIGN.md §StepRule) -----------
+
+    def partan_mu(self, y, stats, co: LogisticCo, u_m, a_mid, dp, mu_max, cfg):
+        return self._bisect_ray(y, co.margin, u_m, mu_max, cfg)
+
+    def partan_update_co(self, y, stats, co: LogisticCo, a_new, mu, u_m, cfg):
+        return LogisticCo(margin=co.margin + mu * u_m)
+
     def objective(self, y, stats, co: LogisticCo, cfg=None):
         return _loss(co.margin, y, cfg)
 

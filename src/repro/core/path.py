@@ -17,6 +17,11 @@ Both FW drivers take an optional problem ``oracle`` (DESIGN.md §Engine;
 default lasso), so the same path protocol — including the batched
 multi-delta lane driver with converged-lane pruning — serves the whole
 solver family (lasso / logistic / elastic-net) on every backend.
+``FWConfig.step_rule`` (DESIGN.md §StepRule) rides through both drivers
+unchanged: the rule's extra state is part of ``EngineState.rule``, so
+warm starts re-init it per grid point and the batched lanes carry it
+per lane; non-classic rules simply run the path per-step
+(``vertex.fused_supported`` gates ``fuse_steps`` off with one warning).
 """
 from __future__ import annotations
 

@@ -26,6 +26,10 @@ class DistSpec:
     model_axis: str = "model"
 
 
+VALID_BACKENDS = ("xla", "pallas", "sparse", "distributed")
+VALID_STEP_RULES = ("classic", "away", "pairwise", "partan", "lazy")
+
+
 @dataclass(frozen=True)
 class FWConfig:
     """Configuration of the stochastic Frank-Wolfe Lasso solver.
@@ -86,6 +90,18 @@ class FWConfig:
         everywhere except on real TPU devices).
       dist: static mesh vocabulary when ``backend == 'distributed'``
         (set by ``repro.distributed``; plain solves leave it None).
+      step_rule: which FW step variant drives each iteration (DESIGN.md
+        §StepRule). 'classic' (default) is the paper's Algorithm-2 step,
+        bit-identical to the pre-refactor trajectory; 'away' adds
+        away-steps over a tracked active set; 'pairwise' moves mass from
+        the away atom straight onto the FW atom; 'partan' extrapolates
+        each FW step against the previous iterate; 'lazy' re-scores a
+        small cache of recent winners before paying a fresh sampled draw.
+        All rules run on every backend, including 'distributed'.
+      active_set_size: tracked active-set capacity for 'away'/'pairwise'
+        (a fixed-size index buffer; weakest-|beta| slot is evicted when
+        a new FW atom enters a full buffer).
+      lazy_cache: winner-cache capacity for the 'lazy' LMO wrapper.
     """
 
     delta: float
@@ -107,6 +123,23 @@ class FWConfig:
     m_tile: int = 512
     interpret: Optional[bool] = None
     dist: Optional[DistSpec] = None
+    step_rule: str = "classic"
+    active_set_size: int = 32
+    lazy_cache: int = 16
+
+    def __post_init__(self):
+        # fail at construction with the valid vocabulary, not deep in
+        # backend dispatch with a KeyError-shaped stack
+        if self.backend not in VALID_BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; valid choices: "
+                f"{', '.join(VALID_BACKENDS)}"
+            )
+        if self.step_rule not in VALID_STEP_RULES:
+            raise ValueError(
+                f"unknown step_rule {self.step_rule!r}; valid choices: "
+                f"{', '.join(VALID_STEP_RULES)}"
+            )
 
 
 @dataclass(frozen=True)

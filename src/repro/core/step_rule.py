@@ -1,0 +1,536 @@
+"""Pluggable FW step rules (DESIGN.md §StepRule).
+
+The engine's iteration skeleton is rule-agnostic: ``engine.rule_step``
+dispatches each iteration to a StepRule that owns (a) direction
+selection — the classic FW vertex, an away vertex from a tracked active
+set, a pairwise/PARTAN combination, or a lazily re-scored cached winner
+— (b) the step-size clip (``g_max`` for away/pairwise, ``mu_max`` for
+PARTAN), and (c) whatever extra state it carries between iterations,
+threaded through ``EngineState.rule`` as a rule-owned pytree slot.
+
+Rule protocol::
+
+    name: str              registry key == FWConfig.step_rule
+    fused_ok: bool         composes with the kernels/fused_step chunk?
+                           (classic only; False rules fall back to
+                           per-step EXPLICITLY — vertex.fused_supported
+                           warns once, never silently)
+    init_state(oracle, cfg, beta, co, y) -> pytree
+    step(oracle, Xt, y, stats, state, cfg, delta) -> EngineState
+
+The away/pairwise machinery leans on one structural fact of the l1 ball:
+with atom set {+-delta e_i} u {0}, the CANONICAL convex decomposition of
+any feasible alpha is w_i = |alpha_i|/delta on the sign-matched atoms
+(w_0 = 1 - ||alpha||_1/delta on the zero atom), and classic/away/
+pairwise steps all PRESERVE that form — so active-set *weights* are
+implicit in the iterate and only a fixed-size active-*index* buffer is
+carried. Stale buffer entries are safe: ``g_max`` is recomputed from the
+live (beta, scale) every step, so feasibility never depends on the
+buffer's freshness, and zero-weight slots are masked out of the away
+argmax. The zero atom is never selected as an away atom (skipping it
+avoids O(p) ||alpha||_1 tracking; moving away from 0 is a pure radial
+inflation the FW direction already provides).
+
+Generalized direction (oracles' ``dir_line_search``/``dir_update_co``):
+
+    alpha(g) = (1 + g t) alpha + g (df e_f + da e_a),  g in [0, g_max]
+
+    classic FW:  t = -1, df = delta_t,        da = 0,              g_max = 1
+    away:        t = +1, df = 0,              da = -sigma_a delta, g_max = w_a/(1-w_a)
+    pairwise:    t =  0, df = delta_t,        da = -sigma_a delta, g_max = w_a
+
+with sigma_a = sign(alpha_a) and w_a = |alpha_a|/delta. The away-vs-FW
+choice is the textbook gap comparison: take the away direction iff
+-<grad, alpha - v_a> > -<grad, v_f - alpha> (both computable from the
+selected scores plus the oracle's <grad, alpha> scalar). A step that
+hits ``g_max`` on an away direction is a DROP step: the away coordinate
+is zeroed exactly (float cancellation must not leave dust that keeps
+the atom alive).
+
+PARTAN (arxiv 1502.01563) extrapolates each classic FW step against the
+previous iterate: after the FW half-step to alpha_mid, move along
+dp = alpha_mid - alpha_prev with mu in [0, mu_max] where the
+conservative mu_max = (delta - ||alpha_mid||_1) / (||alpha_mid||_1 +
+||alpha_prev||_1) keeps l1 feasibility by the triangle inequality. The
+rule state carries (alpha_prev, X alpha_prev) so every line-search
+quantity stays O(m) via X dp = X alpha_mid - X alpha_prev.
+
+The lazy LMO wrapper (arxiv 1803.07348's cache-and-threshold idea,
+adapted to the sampled oracle) re-scores a small ring buffer of recent
+winners through ``vertex.score_indices`` first; a cached vertex whose
+DIRECTIONAL FW GAP ``<grad, alpha> + delta |sel|`` beats the threshold
+phi skips the fresh kappa-draw entirely (lax.cond — the saved dots show
+up in ``n_dots``), a miss pays the classic draw, halves phi when even
+the fresh winner missed it, and inserts the fresh winner into the
+cache. The criterion must be the gap, not the raw score: an exact line
+search zeroes the DIRECTIONAL derivative of the atom it just stepped
+on, so its gap collapses and the cache cannot serve the same atom into
+a stall — raw |grad_i| stays large after the step and would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, vertex
+from repro.core.engine import EngineState
+from repro.core.solver_config import FWConfig
+
+# approximate per-step O(m)-work surcharge of the generalized-direction
+# rules (two column materializations + the u-vector dots), in length-m
+# dot-product units for the n_dots accounting
+DIR_EXTRA_DOTS = 5
+# PARTAN surcharge: the extrapolation dots + exact S/F recompute
+PARTAN_EXTRA_DOTS = 4
+# PARTAN extrapolation cap: the line search runs on [0, MU_CAP] and the
+# result is only kept when ||a_mid + mu dp||_1 stays inside the ball
+PARTAN_MU_CAP = 8.0
+# PARTAN co-state drift odometer limit: the extrapolation recursion
+# co' = co - mu u_m amplifies fp32 error by ~(1 + 2 mu) per step, so a
+# fixed refresh cadence cannot bound the drift — the rule integrates the
+# amplification product and rebuilds the co-state from an exact matvec
+# when it crosses this limit (rel error ~ eps_f32 * limit ~ 6e-5)
+PARTAN_DRIFT_LIMIT = 1024.0
+
+
+class DirStep(NamedTuple):
+    """One generalized FW direction d = t*alpha + df*e_{i_f} + da*e_{i_a}
+    (every leaf a replicated scalar under the distributed backend)."""
+
+    t: jax.Array  # alpha coefficient: -1 classic, +1 away, 0 pairwise
+    df: jax.Array  # FW-atom coefficient (delta_t, or 0 on away steps)
+    da: jax.Array  # away-atom coefficient (-sigma_a * delta, or 0)
+    i_f: jax.Array  # FW vertex coordinate
+    i_a: jax.Array  # away vertex coordinate (safe dummy when da == 0)
+    a_f: jax.Array  # alpha[i_f]
+    a_a: jax.Array  # alpha[i_a]
+    sel_f: jax.Array  # selected (gradient) score at i_f
+    sel_a: jax.Array  # selected (gradient) score at i_a
+    same: jax.Array  # 1.0 when i_f == i_a else 0.0
+    g_max: jax.Array  # step-size clip
+
+
+def apply_dir_update(beta, scale, maxabs, stall, ds: DirStep, g, no_progress,
+                     cfg: FWConfig):
+    """Generalized-direction twin of ``engine.apply_coeff_update``:
+    the scaled-iterate coefficient update for alpha(g), the exact zero
+    on away drop steps, and the §Stopping statistics. Returns
+    ``(beta, scale, maxabs, step_inf, stall)``."""
+    gt = g * ds.t
+    one_gt = 1.0 + gt
+    new_scale = scale * one_gt
+    # renormalize on underflow (classic parity; away steps GROW the scale)
+    need_renorm = new_scale < cfg.renorm_threshold
+    beta, scale = jax.lax.cond(
+        need_renorm,
+        lambda b, s: (b * s, jnp.ones((), b.dtype)),
+        lambda b, s: (b, s),
+        beta,
+        new_scale,
+    )
+    denom = jnp.maximum(scale, cfg.eps_den)
+    beta = beta.at[ds.i_f].add(g * ds.df / denom)
+    beta = beta.at[ds.i_a].add(g * ds.da / denom)
+    # drop step: the away atom leaves the decomposition EXACTLY
+    drop = (ds.da != 0.0) & (g >= ds.g_max) & (ds.same == 0.0)
+    beta = beta.at[ds.i_a].set(jnp.where(drop, 0.0, beta[ds.i_a]))
+    # ||alpha' - alpha||_inf upper bound: |t| maxabs off the atoms, the
+    # exact per-atom movement on them (same-coordinate terms folded in)
+    d_f = ds.t * ds.a_f + ds.df + ds.same * ds.da
+    d_a = ds.t * ds.a_a + ds.da + ds.same * ds.df
+    step_inf = g * jnp.maximum(
+        jnp.abs(ds.t) * maxabs, jnp.maximum(jnp.abs(d_f), jnp.abs(d_a))
+    )
+    maxabs = jnp.maximum(
+        jnp.abs(one_gt) * maxabs,
+        jnp.maximum(jnp.abs(scale * beta[ds.i_f]), jnp.abs(scale * beta[ds.i_a])),
+    )
+    stall = jnp.where((step_inf <= cfg.tol) | no_progress, stall + 1, 0)
+    return beta, scale, maxabs, step_inf, stall
+
+
+# --------------------------------------------------------------------------
+# Active-set index buffer (away / pairwise)
+# --------------------------------------------------------------------------
+
+
+def init_active_set(beta, cfg: FWConfig) -> jax.Array:
+    """Fixed-size (active_set_size,) int32 index buffer: the largest-|beta|
+    support coordinates for warm starts, -1 (empty) elsewhere. A support
+    wider than the buffer just means some atoms are invisible to away
+    steps — the algorithm stays correct, only less eager to drop them."""
+    cap = cfg.active_set_size
+    p = beta.shape[0]
+    k_eff = min(cap, p)
+    vals, idx = jax.lax.top_k(jnp.abs(beta), k_eff)
+    idx = jnp.where(vals > 0, idx, -1).astype(jnp.int32)
+    if k_eff < cap:
+        idx = jnp.concatenate([idx, jnp.full((cap - k_eff,), -1, jnp.int32)])
+    return idx
+
+
+def insert_active(buf: jax.Array, i_new, beta) -> jax.Array:
+    """Track ``i_new``: no-op when present, else evict the weakest-|beta|
+    slot (empty slots first). Eviction cannot break feasibility — weights
+    live in (beta, scale), the buffer only limits away candidates."""
+    p = beta.shape[0]
+    present = jnp.any(buf == i_new)
+    w = jnp.where(
+        buf >= 0, jnp.abs(jnp.take(beta, jnp.clip(buf, 0, p - 1))), -1.0
+    )
+    slot = jnp.argmin(w)
+    inserted = buf.at[slot].set(i_new.astype(buf.dtype))
+    return jnp.where(present, buf, inserted)
+
+
+def _select_away(oracle, Xt, w, buf, beta, scale, delta, p, cfg):
+    """Away-vertex argmax over the tracked active set: re-score the buffer
+    coordinates (``vertex.score_indices`` — the sampled-argmax machinery
+    restricted to the active set; one extended psum distributed), mask
+    empty/zero-weight slots, and pick the atom the gradient most wants to
+    LEAVE: argmax_i <grad, sigma_i delta e_i>."""
+    extra_fn = oracle.score_extra(beta, scale)
+    _, sel_b = vertex.score_indices(Xt, w, buf, p, cfg, extra_fn)
+    a_b = scale * jnp.take(beta, jnp.clip(buf, 0, p - 1))
+    valid = (buf >= 0) & (a_b != 0.0)
+    sigma = jnp.sign(a_b)
+    score = jnp.where(valid, sigma * sel_b, -jnp.inf)
+    j = jnp.argmax(score)
+    any_valid = jnp.any(valid)
+    i_a = jnp.where(any_valid, jnp.clip(buf[j], 0, p - 1), 0)
+    return i_a, sel_b[j], a_b[j], sigma[j], any_valid
+
+
+# --------------------------------------------------------------------------
+# The rules
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassicRule:
+    """The paper's Algorithm-2 step — ``engine.step`` itself, so the
+    trajectory (and jaxpr) is bit-identical to the pre-refactor engine."""
+
+    name = "classic"
+    fused_ok = True
+
+    def init_state(self, oracle, cfg, beta, co, y):
+        return ()
+
+    def step(self, oracle, Xt, y, stats, state, cfg, delta) -> EngineState:
+        return engine.step(oracle, Xt, y, stats, state, cfg, delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class DirRule:
+    """Away-steps (``pairwise=False``) / pairwise (``pairwise=True``) FW
+    over the sampled oracle. Rule state: the active-set index buffer."""
+
+    pairwise: bool
+
+    fused_ok = False
+
+    @property
+    def name(self):
+        return "pairwise" if self.pairwise else "away"
+
+    def init_state(self, oracle, cfg, beta, co, y):
+        return init_active_set(beta, cfg)
+
+    def step(self, oracle, Xt, y, stats, state: EngineState, cfg: FWConfig,
+             delta) -> EngineState:
+        p = state.beta.shape[0]
+        buf = state.rule
+        key, sub = jax.random.split(state.key)
+
+        w = oracle.cograd(state.co, y)
+        extra_fn = oracle.score_extra(state.beta, state.scale)
+        i_f, _, sel_f, n_scored = vertex.sample_vertex(
+            Xt, w, sub, p, cfg, extra_fn
+        )
+        i_a, sel_a, a_a, sigma_a, any_valid = _select_away(
+            oracle, Xt, w, buf, state.beta, state.scale, delta, p, cfg
+        )
+
+        df_fw = -delta * jnp.sign(sel_f)
+        a_f = state.scale * state.beta[i_f]
+        w_a = jnp.abs(a_a) / jnp.maximum(delta, cfg.eps_den)
+        usable = any_valid & (w_a > 0.0)
+        if self.pairwise:
+            # pairwise when an away atom exists AND the paired direction
+            # descends: its gap delta (|sel_f| + sigma_a sel_a) must be
+            # positive — with only stale buffer candidates the best
+            # "away" atom's leave-score can be negative enough to cancel
+            # the FW term, which would ratchet the stall counter through
+            # a <= 0 gap numerator; fall back to classic FW instead
+            use_alt = usable & (jnp.abs(sel_f) + sigma_a * sel_a > 0.0)
+            t = jnp.where(use_alt, 0.0, -1.0)
+            df = df_fw
+            g_max = jnp.where(use_alt, w_a, 1.0)
+        else:
+            # away iff its directional gap beats the FW direction's
+            ga = oracle.grad_dot_alpha(
+                state.co, stats, y, state.beta, state.scale, cfg
+            )
+            fw_gap = ga - df_fw * sel_f
+            away_gap = sigma_a * delta * sel_a - ga
+            use_alt = usable & (away_gap > fw_gap)
+            t = jnp.where(use_alt, 1.0, -1.0)
+            df = jnp.where(use_alt, 0.0, df_fw)
+            g_max = jnp.where(
+                use_alt,
+                jnp.minimum(w_a / jnp.maximum(1.0 - w_a, cfg.eps_den), 1e3),
+                1.0,
+            )
+        da = jnp.where(use_alt, -sigma_a * delta, 0.0)
+
+        # direction image X d = t (X alpha) + u_lin, u_lin = df z_f + da z_a
+        z_f = vertex.column_dense(Xt, i_f, cfg)
+        z_a = vertex.column_dense(Xt, i_a, cfg)
+        u_lin = df * z_f + da * z_a
+
+        ds = DirStep(
+            t=t, df=df, da=da, i_f=i_f, i_a=i_a, a_f=a_f, a_a=a_a,
+            sel_f=sel_f, sel_a=sel_a,
+            same=(i_f == i_a).astype(state.beta.dtype),
+            g_max=g_max,
+        )
+        g, no_progress, aux = oracle.dir_line_search(
+            y, stats, state.co, ds, u_lin, cfg
+        )
+        beta, scale, maxabs, step_inf, stall = apply_dir_update(
+            state.beta, state.scale, state.maxabs, state.stall, ds, g,
+            no_progress, cfg,
+        )
+        co = oracle.dir_update_co(
+            Xt, y, stats, state.co, beta, scale, ds, g, u_lin, state.k, cfg,
+            aux,
+        )
+        # the FW atom enters the active set whenever it gained weight
+        took_fw = (df != 0.0) & (g > 0.0)
+        buf = jnp.where(took_fw, insert_active(buf, i_f, beta), buf)
+
+        return EngineState(
+            beta=beta,
+            scale=scale,
+            co=co,
+            maxabs=maxabs,
+            step_inf=step_inf,
+            stall=stall,
+            n_dots=state.n_dots
+            + n_scored
+            + buf.shape[0]
+            + DIR_EXTRA_DOTS
+            + oracle.extra_dots,
+            k=state.k + 1,
+            key=key,
+            rule=buf,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PartanRule:
+    """PARTAN-accelerated FW: a classic engine step to alpha_mid, then an
+    extrapolation along alpha_mid - alpha_prev (arxiv 1502.01563). Rule
+    state: (alpha_prev, X alpha_prev, drift odometer). O(p) per step by
+    construction — the extrapolation touches every coordinate."""
+
+    name = "partan"
+    fused_ok = False
+
+    def init_state(self, oracle, cfg, beta, co, y):
+        return (beta, oracle.co_linpred(co, y), jnp.zeros((), jnp.float32))
+
+    def step(self, oracle, Xt, y, stats, state: EngineState, cfg: FWConfig,
+             delta) -> EngineState:
+        a_prev, v_prev, drift = state.rule
+        alpha_old = state.scale * state.beta
+        mid = engine.step(oracle, Xt, y, stats, state, cfg, delta)
+        no_prog_mid = mid.stall > state.stall
+
+        a_mid = mid.scale * mid.beta
+        v_mid = oracle.co_linpred(mid.co, y)
+        dp = a_mid - a_prev
+        u_m = v_mid - v_prev  # X dp on the local sample slice
+        # optimistic clip: line-search on [0, PARTAN_MU_CAP] first — dp
+        # usually runs ALONG the l1 sphere (consecutive FW iterates share
+        # sign pattern), so the optimum is typically feasible as-is. Only
+        # when the exact ||.||_1 check fails fall back to the triangle-
+        # inequality bound mu <= (delta - ||a_mid||_1) / (||a_mid||_1 +
+        # ||a_prev||_1), which is safe but collapses to 0 on the sphere.
+        mu_opt = oracle.partan_mu(
+            y, stats, mid.co, u_m, a_mid, dp, jnp.asarray(PARTAN_MU_CAP), cfg
+        )
+        s_mid = jnp.sum(jnp.abs(a_mid))
+        s_prev = jnp.sum(jnp.abs(a_prev))
+        l1_try = jnp.sum(jnp.abs(a_mid + mu_opt * dp))
+        mu_cons = jnp.maximum(delta - s_mid, 0.0) / jnp.maximum(
+            s_mid + s_prev, cfg.eps_den
+        )
+        # any mu in [0, mu_opt] still descends (convex line objective)
+        mu = jnp.where(
+            l1_try <= delta * (1.0 + 1e-6),
+            mu_opt,
+            jnp.minimum(mu_opt, mu_cons),
+        )
+        a_new = a_mid + mu * dp
+        co = oracle.partan_update_co(y, stats, mid.co, a_new, mu, u_m, cfg)
+        # drift-triggered EXACT co-state rebuild: each extrapolation
+        # amplifies the recursion's fp32 error by ~(1 + 2 mu), so a fixed
+        # cadence cannot bound the drift — integrate the amplification
+        # product and rebuild co from an exact X a_new matvec when it
+        # crosses PARTAN_DRIFT_LIMIT (cheap when mu ~ 0, eager when the
+        # extrapolation is actually firing)
+        drift = (1.0 + 2.0 * jnp.abs(mu).astype(jnp.float32)) * drift + 1.0
+        refresh = drift > PARTAN_DRIFT_LIMIT
+        co = jax.lax.cond(
+            refresh,
+            lambda: oracle.init_co(
+                y, vertex.matvec(Xt, a_new, cfg), a_new, a_new.dtype, cfg
+            ),
+            lambda: co,
+        )
+        drift = jnp.where(refresh, 0.0, drift)
+        # carry the OUTER iterate as the next step's extrapolation anchor
+        # (textbook PARTAN pairs x_mid with x_{k-1}); reading v through
+        # the refreshed co means a rebuild also hands the next step an
+        # exact v_prev, not one carrying the pre-refresh drift
+        v_new = oracle.co_linpred(co, y)
+        # exact stopping statistics — PARTAN is O(p) anyway
+        step_inf = jnp.max(jnp.abs(a_new - alpha_old))
+        stall = jnp.where(
+            (step_inf <= cfg.tol) | no_prog_mid, state.stall + 1, 0
+        )
+        return EngineState(
+            beta=a_new,
+            scale=jnp.ones((), a_new.dtype),
+            co=co,
+            maxabs=jnp.max(jnp.abs(a_new)),
+            step_inf=step_inf,
+            stall=stall,
+            n_dots=mid.n_dots
+            + PARTAN_EXTRA_DOTS
+            + jnp.where(refresh, a_new.shape[0], 0),
+            k=mid.k,
+            key=mid.key,
+            rule=(a_new, v_new, drift),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class LazyRule:
+    """Lazy LMO wrapper around the classic step: re-score a ring buffer of
+    recent winners first; a cached vertex with directional FW gap >= phi
+    skips the fresh sampled draw (lax.cond — the skipped kappa dots are
+    real savings, visible in ``n_dots``). Rule state: (cache indices,
+    phi gap threshold)."""
+
+    name = "lazy"
+    fused_ok = False
+
+    def init_state(self, oracle, cfg, beta, co, y):
+        return (
+            jnp.full((cfg.lazy_cache,), -1, jnp.int32),
+            jnp.full((), jnp.inf, jnp.float32),
+        )
+
+    def step(self, oracle, Xt, y, stats, state: EngineState, cfg: FWConfig,
+             delta) -> EngineState:
+        p = state.beta.shape[0]
+        cache, phi = state.rule
+        cap = cache.shape[0]
+        key, sub = jax.random.split(state.key)
+
+        w = oracle.cograd(state.co, y)
+        extra_fn = oracle.score_extra(state.beta, state.scale)
+        # directional FW gap of vertex -delta sign(sel) e_i is
+        # <grad, alpha> + delta |sel_i| — the lazy acceptance currency
+        ga = oracle.grad_dot_alpha(
+            state.co, stats, y, state.beta, state.scale, cfg
+        )
+        raw_c, sel_c = vertex.score_indices(Xt, w, cache, p, cfg, extra_fn)
+        gap_c = jnp.where(
+            cache >= 0,
+            (ga + delta * jnp.abs(sel_c)).astype(jnp.float32),
+            -jnp.inf,
+        )
+        j = jnp.argmax(gap_c)
+        hit = gap_c[j] >= phi
+        nd = engine.dot_dtype()
+
+        def cached(_):
+            return (
+                jnp.clip(cache[j], 0, p - 1),
+                raw_c[j],
+                sel_c[j],
+                jnp.asarray(cap, nd),
+                phi,
+                cache,
+            )
+
+        def fresh(_):
+            i2, raw2, sel2, ns2 = vertex.sample_vertex(
+                Xt, w, sub, p, cfg, extra_fn
+            )
+            gap2 = (ga + delta * jnp.abs(sel2)).astype(jnp.float32)
+            # first fresh draw seeds phi at half its gap; later draws
+            # whose gap misses phi halve it (Braun et al.'s Phi update)
+            phi2 = jnp.where(
+                jnp.isinf(phi),
+                0.5 * gap2,
+                jnp.where(gap2 < phi, 0.5 * phi, phi),
+            )
+            cache2 = cache.at[state.k % cap].set(i2.astype(jnp.int32))
+            return (i2, raw2, sel2, jnp.asarray(cap + ns2, nd), phi2, cache2)
+
+        i_star, g_raw, g_sel, n_scored, phi_new, cache_new = jax.lax.cond(
+            hit, cached, fresh, None
+        )
+
+        # classic tail on the chosen vertex (same op sequence as
+        # engine.step past selection)
+        delta_t = -delta * jnp.sign(g_sel)
+        a_star = state.scale * state.beta[i_star]
+        lam, no_progress, aux = oracle.line_search(
+            Xt, y, stats, state.co, i_star, g_raw, g_sel, a_star, delta_t, cfg
+        )
+        beta, scale, maxabs, step_inf, stall = engine.apply_coeff_update(
+            state.beta, state.scale, state.maxabs, state.stall, a_star,
+            i_star, lam, delta_t, no_progress, cfg,
+        )
+        co = oracle.update_co(
+            Xt, y, stats, state.co, beta, scale, i_star, a_star, lam,
+            delta_t, state.k, cfg, aux,
+        )
+        return EngineState(
+            beta=beta,
+            scale=scale,
+            co=co,
+            maxabs=maxabs,
+            step_inf=step_inf,
+            stall=stall,
+            n_dots=state.n_dots + n_scored + 1 + oracle.extra_dots,
+            k=state.k + 1,
+            key=key,
+            rule=(cache_new, phi_new),
+        )
+
+
+_RULES = {
+    "classic": ClassicRule(),
+    "away": DirRule(pairwise=False),
+    "pairwise": DirRule(pairwise=True),
+    "partan": PartanRule(),
+    "lazy": LazyRule(),
+}
+
+
+def get_rule(cfg) -> Any:
+    """The StepRule for ``cfg.step_rule`` (classic when cfg is None —
+    the back-compat entry points predate the rule knob)."""
+    if cfg is None:
+        return _RULES["classic"]
+    return _RULES[cfg.step_rule]

@@ -283,6 +283,44 @@ def _sparse_vertex(mat: SparseBlockMatrix, w, key, cfg, extra_fn):
     return i_star, g_raw, g_sel, n_scored
 
 
+def score_indices(
+    Xt,
+    w: jax.Array,
+    idx: jax.Array,
+    p: int,
+    cfg: FWConfig,
+    extra_fn: Optional[ExtraFn] = None,
+):
+    """Linear scores ``raw_i = -z_i^T w`` at CALLER-CHOSEN global
+    coordinates ``idx`` — the re-scoring primitive behind the away-vertex
+    argmin (active-set buffer) and the lazy-LMO winner cache (DESIGN.md
+    §StepRule). Backend-dispatched like ``sample_vertex`` but with no
+    draw and no argmax: the step rule owns the masking/reduction.
+
+    Negative or out-of-range indices are the rules' "empty slot" markers;
+    they come back with an arbitrary score and MUST be masked by the
+    caller (``idx >= 0 & idx < p``). Returns ``(raw, sel)`` with
+    ``sel = raw + extra_fn(idx)`` (same array when ``extra_fn is None``).
+    """
+    safe = jnp.clip(idx, 0, p - 1).astype(jnp.int32)
+    if cfg.backend == "distributed":
+        from repro.distributed import backend as dist_backend
+
+        raw = dist_backend.dist_score_indices(Xt, w, safe, cfg)
+    elif cfg.backend == "sparse":
+        raw = sparse_ops.sparse_gather_scores(Xt, w, safe).astype(Xt.dtype)
+    elif cfg.backend == "pallas":
+        raw = _sampled_scores_kernel(
+            Xt, w, safe, block_size=1, m_tile=cfg.m_tile,
+            interpret=use_interpret(cfg),
+        )
+    else:
+        rows = jnp.take(Xt, safe, axis=0)  # (|idx|, m) row gather
+        raw = -(rows @ w)
+    sel = raw if extra_fn is None else raw + extra_fn(safe)
+    return raw, sel
+
+
 def sample_vertex(
     Xt,
     w: jax.Array,
@@ -314,6 +352,9 @@ def sample_vertex(
 # --------------------------------------------------------------------------
 
 
+_warned_unfused_rules: set = set()
+
+
 def fused_supported(oracle, cfg: FWConfig) -> bool:
     """Trace-time gate for the chunked K-steps-per-dispatch hot loop.
 
@@ -321,16 +362,40 @@ def fused_supported(oracle, cfg: FWConfig) -> bool:
     closed-form line search exposed through the ``fused_*`` protocol
     (lasso / elastic-net; the logistic bisection falls back to the
     per-step loop), (c) 'uniform' sampling — the K x kappa index stream
-    must be pregenerable as a pure function of (key, cfg, p) — and
-    (d) a single-device backend (the distributed driver forces
-    fuse_steps=1 for now).
+    must be pregenerable as a pure function of (key, cfg, p) — (d) a
+    single-device backend (the distributed driver forces fuse_steps=1
+    for now), and (e) a step rule that composes with the megakernel's
+    per-step records (``classic`` only: the other rules' direction
+    selection reads live iterate state the chunk cannot pregather, so
+    they declare ``fused_ok=False`` and fall back to per-step with a
+    one-time warning — explicitly, never silently; DESIGN.md §StepRule).
     """
-    return (
+    base = (
         cfg.fuse_steps > 1
         and cfg.sampling == "uniform"
         and getattr(oracle, "fused_kind", None) is not None
         and cfg.backend != "distributed"
     )
+    if not base:
+        return False
+    if cfg.step_rule != "classic":
+        from repro.core import step_rule as step_rule_lib
+
+        rule = step_rule_lib.get_rule(cfg)
+        if not rule.fused_ok:
+            if cfg.step_rule not in _warned_unfused_rules:
+                _warned_unfused_rules.add(cfg.step_rule)
+                import warnings
+
+                warnings.warn(
+                    f"step_rule={cfg.step_rule!r} does not compose with "
+                    f"the fused multi-step chunk (fuse_steps="
+                    f"{cfg.fuse_steps}); falling back to per-step "
+                    "execution (fuse_steps=1 semantics)",
+                    stacklevel=2,
+                )
+            return False
+    return True
 
 
 def use_fused_kernel(cfg: FWConfig) -> bool:

@@ -9,7 +9,8 @@ pruning and all — under one shard_map over a (data, model) mesh.
     res = distributed.solve(LASSO, op, cfg, key)
 
 Supersedes the dense-only, lasso-only shard_map loop that used to live
-in ``repro.core.distributed`` (now a deprecation shim).
+in ``repro.core.distributed`` (the deprecation shim is retired; import
+from here).
 """
 from repro.distributed import backend, driver, shard
 from repro.distributed.driver import (

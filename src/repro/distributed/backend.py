@@ -137,6 +137,25 @@ def dist_sample_vertex(
     return idx[j], raw[j], sel[j], n_scored
 
 
+def dist_score_indices(Xt_l, w_l: jax.Array, idx: jax.Array, cfg: FWConfig):
+    """Distributed twin of ``vertex.score_indices``: the step rules'
+    re-scoring pass over caller-chosen coordinates (the away/pairwise
+    active-set buffer, the lazy-LMO winner cache). Same masked-owner
+    partial scores as the sampled draw, ONE psum over BOTH axes to
+    complete the gradient coordinates and replicate them — this is the
+    score psum extended to the away candidates, so every step rule runs
+    under ``backend='distributed'`` with replicated selections."""
+    spec = _spec(cfg)
+    off, p_loc = feature_range(Xt_l, spec)
+    raw = jax.lax.psum(
+        _local_scores(Xt_l, w_l, idx, off, p_loc), _both_axes(spec)
+    )
+    if isinstance(Xt_l, SparseBlockMatrix):
+        # the sparse single-device path hands back storage-dtype scores
+        raw = raw.astype(Xt_l.dtype)
+    return raw
+
+
 # --------------------------------------------------------------------------
 # Winning-column broadcast + eq. 10 update
 # --------------------------------------------------------------------------

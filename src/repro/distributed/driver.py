@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -35,6 +36,9 @@ from repro.distributed.shard import ShardedOperand
 from repro.sparse.matrix import SparseBlockMatrix
 
 
+_warned_fuse_steps = False
+
+
 def dist_config(cfg: FWConfig, op: ShardedOperand) -> FWConfig:
     """The static config the engine step sees inside the shard_map: the
     distributed backend plus the operand's mesh vocabulary. The caller's
@@ -43,7 +47,20 @@ def dist_config(cfg: FWConfig, op: ShardedOperand) -> FWConfig:
     ``fuse_steps`` is forced to 1: the fused chunk (DESIGN.md §Perf) is
     single-device-only for now — a per-shard chunk would have to carry
     the score psum and the winning-column broadcast INSIDE the kernel
-    (K collective rounds per launch), which is a follow-on (ROADMAP)."""
+    (K collective rounds per launch), which is a follow-on (ROADMAP).
+    The override is no longer silent: a one-time warning fires, and the
+    effective value is surfaced on ``SolveResult.effective_fuse_steps``
+    so callers can tell what actually ran."""
+    global _warned_fuse_steps
+    if cfg.fuse_steps != 1 and not _warned_fuse_steps:
+        _warned_fuse_steps = True
+        warnings.warn(
+            f"distributed driver forces fuse_steps=1 (requested "
+            f"{cfg.fuse_steps}): the fused multi-step chunk is "
+            "single-device-only; see SolveResult.effective_fuse_steps "
+            "for what actually ran",
+            stacklevel=3,
+        )
     return dataclasses.replace(
         cfg, backend="distributed", dist=op.spec, fuse_steps=1
     )

@@ -17,7 +17,13 @@ Coverage (ISSUE 4 acceptance):
     ``gap()``) at every grid point;
   * the coo-npz-v1 manifest loader places the same operand as the
     in-memory shard placement;
-  * the repro.core.distributed deprecation shim still solves.
+  * away/pairwise step rules (DESIGN.md §StepRule) solve through the
+    distributed backend, matching single-device sparse to tolerance on a
+    (1, 4) mesh (the away-step arithmetic picks up different FMA fusion
+    under shard_map, so unlike the classic rule the parity is fp-level,
+    not bitwise — the index streams and step kinds still agree);
+  * a non-default ``fuse_steps`` warns once and the forced value is
+    surfaced on ``SolveResult.effective_fuse_steps``.
 """
 import json
 import subprocess
@@ -161,14 +167,30 @@ SCRIPT = textwrap.dedent("""
     r_ld = dist.solve(LASSO, op_ld, cfg_blk, key)
     out["loader_obj"] = [float(r_ld.objective), float(b_d.objective)]
 
-    # ---- deprecation shim ----
-    from repro.core.distributed import make_distributed_solver
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        shim = make_distributed_solver(mesh14, cfg, 100)
-    a, obj, nd = shim(jnp.asarray(Xd), yj, key)
-    out["shim"] = [float(obj), int(nd),
-                   float(jnp.sum(jnp.abs(jnp.asarray(a))))]
+    # ---- step rules through the distributed backend (§StepRule) ----
+    rules = {}
+    for rule in ("away", "pairwise"):
+        cfg_r = FWConfig(**{**cfg.__dict__, "step_rule": rule})
+        rr_d = dist.solve(LASSO, op14, cfg_r, key)
+        rr_s = engine.solve(LASSO, mat, yj, as_sparse(cfg_r), key)
+        rules[rule] = {
+            "objs": [float(rr_d.objective), float(rr_s.objective)],
+            "l1": float(jnp.sum(jnp.abs(rr_d.alpha))),
+            "active": [int(jnp.sum(rr_d.alpha != 0)),
+                       int(jnp.sum(rr_s.alpha != 0))],
+        }
+    out["rules"] = rules
+
+    # ---- forced fuse_steps=1: warns once, surfaced on the result ----
+    cfg_f = FWConfig(**{**cfg.__dict__, "fuse_steps": 4})
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        rf = dist.solve(LASSO, op14, cfg_f, key)
+        rf2 = dist.solve(LASSO, op14, cfg_f, key)
+    out["fuse"] = {
+        "n_warn": sum("fuse_steps" in str(w.message) for w in caught),
+        "effective": int(rf.effective_fuse_steps),
+    }
 
     print("RESULT" + json.dumps(out))
 """)
@@ -265,10 +287,18 @@ class TestShardIO:
         assert o_ld == o_mem
 
 
-class TestDeprecationShim:
-    def test_shim_solves(self, dist_result):
-        obj, n_dots, l1 = dist_result["shim"]
-        assert n_dots == 100 * 60  # kappa per iteration
-        assert l1 <= 120.0 * (1 + 1e-4)
-        # optimizing at all: below the null objective
-        assert obj < 1298267.0
+class TestStepRulesOnMesh:
+    @pytest.mark.parametrize("rule", ["away", "pairwise"])
+    def test_rule_matches_single_device(self, dist_result, rule):
+        r = dist_result["rules"][rule]
+        obj_d, obj_s = r["objs"]
+        assert abs(obj_d - obj_s) / max(abs(obj_s), 1e-9) < 1e-4, r
+        assert r["l1"] <= 120.0 * (1 + 1e-4)
+        # same sparsity structure: the rules agree on which atoms live
+        assert r["active"][0] == r["active"][1], r
+
+
+class TestForcedFuseSteps:
+    def test_warns_once_and_surfaces_effective_value(self, dist_result):
+        assert dist_result["fuse"]["n_warn"] == 1
+        assert dist_result["fuse"]["effective"] == 1
