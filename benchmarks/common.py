@@ -117,11 +117,45 @@ class CSV:
         print(row, flush=True)
 
 
+def _git_sha() -> str:
+    """Repo HEAD sha, "unknown" outside a work tree / without git. The
+    subprocess is guarded — provenance must never fail a benchmark."""
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except Exception:  # noqa: BLE001 - best-effort metadata
+        return "unknown"
+
+
+def bench_provenance() -> dict:
+    """Run provenance stamped into every BenchJSON artifact (and reused
+    by the solver-report CLI): git sha, jax + device identity, UTC
+    timestamp — enough to answer "what produced this number" when two
+    BENCH files disagree across PRs."""
+    devices = jax.devices()
+    return {
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "device_kind": devices[0].device_kind if devices else "none",
+        "device_count": len(devices),
+        "timestamp_utc": time.strftime(
+            "%Y-%m-%dT%H:%M:%SZ", time.gmtime()
+        ),
+    }
+
+
 class BenchJSON:
     """Machine-readable benchmark sink: one BENCH_*.json per section so the
     perf trajectory (per-backend wall-clock, shapes, iteration counts) is
     diffable across PRs. Output dir: $REPRO_BENCH_JSON_DIR (default cwd).
-    """
+    Every payload carries ``bench_provenance()`` metadata."""
 
     def __init__(self, filename: str):
         out_dir = os.environ.get("REPRO_BENCH_JSON_DIR", ".")
@@ -136,6 +170,7 @@ class BenchJSON:
             "scale": SCALE,
             "jax_backend": jax.default_backend(),
             "platform": platform.platform(),
+            "provenance": bench_provenance(),
             "records": self.records,
         }
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)

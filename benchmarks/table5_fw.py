@@ -28,6 +28,7 @@ from benchmarks.common import (
 )
 from repro.core import CDConfig, FWConfig, LOGISTIC, ENOracle, engine, path as path_lib
 from repro.core.sampling import kappa_fraction
+from repro.utils.timing import Timer, timed
 
 N_POINTS = 20 if SCALE == "ci" else 100
 SPARSE_BENCH_DATASET = "e2006-tfidf"
@@ -124,7 +125,7 @@ def _run_sparse_section(csv: CSV, js: BenchJSON):
     p, m = mat.shape
     deltas = path_lib.delta_grid(_sparse_delta_max(mat, y, ds), n_points=N_POINTS)
     kappa = kappa_fraction(p, 0.01)
-    times = {}
+    timers = {}
     results = {}
     arms = [("sparse", mat)]
     if 4 * p * m < 2 << 30:  # densified arm only when it fits (proxies do;
@@ -134,20 +135,20 @@ def _run_sparse_section(csv: CSV, js: BenchJSON):
             delta=1.0, kappa=kappa, sampling="uniform",
             max_iters=20_000, tol=1e-3, backend=backend,
         )
-        t0 = time.perf_counter()
-        res = path_lib.fw_path(A, y, deltas, cfg)
-        times[backend] = time.perf_counter() - t0
+        t = timers.setdefault(backend, Timer())
+        with timed(f"table5/sparse/fw_path_{backend}", sink=t):
+            res = path_lib.fw_path(A, y, deltas, cfg)
         results[backend] = res
         csv.emit(
             f"table5/{SPARSE_BENCH_DATASET}-sparse/fw_1pct_{backend}",
-            times[backend] * 1e6 / N_POINTS,
+            t.total * 1e6 / N_POINTS,
             f"m={m};p={p};kappa={kappa};nnz_max={mat.nnz_max};"
             f"iters={res.total_iters};dots={res.total_dots};"
             f"mean_active={res.mean_active:.1f}",
         )
         js.add(f"table5/{SPARSE_BENCH_DATASET}-sparse/fw_1pct_{backend}",
                m=m, p=p, kappa=kappa, nnz_max=mat.nnz_max, backend=backend,
-               n_points=N_POINTS, seconds=times[backend],
+               n_points=N_POINTS, seconds=t.total,
                iters=res.total_iters, dots=res.total_dots,
                mean_active=res.mean_active)
     if "xla" in results:
@@ -156,13 +157,18 @@ def _run_sparse_section(csv: CSV, js: BenchJSON):
         ) / max(abs(results["xla"].points[-1].objective), 1e-12)
         csv.emit(
             f"table5/{SPARSE_BENCH_DATASET}-sparse/speedup",
-            times["xla"] / times["sparse"] * 100,
-            f"sparse_vs_dense={times['xla']/times['sparse']:.1f}x;"
+            timers["xla"].total / timers["sparse"].total * 100,
+            f"sparse_vs_dense={timers['xla'].total/timers['sparse'].total:.1f}x;"
             f"final_obj_rel_diff={obj_rel:.2e}",
         )
         js.add(f"table5/{SPARSE_BENCH_DATASET}-sparse/speedup",
-               sparse_vs_dense=times["xla"] / times["sparse"],
+               sparse_vs_dense=timers["xla"].total / timers["sparse"].total,
                final_obj_rel_diff=obj_rel)
+    section = Timer()
+    for t in timers.values():
+        section.merge(t)
+    js.add(f"table5/{SPARSE_BENCH_DATASET}-sparse/section_total",
+           seconds=section.total, paths=section.count)
 
 
 def _run_family_section(csv: CSV, js: BenchJSON):

@@ -1,0 +1,119 @@
+"""CI telemetry smoke (DESIGN.md §Observability).
+
+Three gates, in order:
+
+  1. Artifact gate — run ``scripts/solver_report.py`` with a distributed
+     (4 virtual CPU device) run included; it fails non-zero if the trace
+     does not validate against the Perfetto trace_event schema subset.
+  2. Schema re-check — load the written ``solver_trace.json`` and
+     ``solver_report.json`` back from disk and validate them
+     independently (what the upload step actually ships).
+  3. Overhead gate — time the kernels-bench-style hotloop (xla backend,
+     p=2048, m=256, kappa=128, fixed 400 iterations) with telemetry off
+     vs ON (default ring, per-step objectives), min-of-N wall clock, and
+     fail if telemetry-on exceeds the budget:
+     $REPRO_TELEMETRY_OVERHEAD_PCT (default 10).
+
+Usage: PYTHONPATH=src python scripts/telemetry_smoke.py --out-dir reports
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO_ROOT, os.path.join(_REPO_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+OVERHEAD_PCT = float(os.environ.get("REPRO_TELEMETRY_OVERHEAD_PCT", "10"))
+
+
+def overhead_gate(repeats: int = 5) -> float:
+    """Telemetry-on vs -off hotloop wall clock; returns overhead in %."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import FWConfig, LASSO, engine
+    from repro.data import make_regression, standardize
+    from repro.obs import TelemetrySpec
+
+    ds = standardize(
+        make_regression(m=256, p=2048, n_informative=20, noise=0.5, seed=0)
+    )
+    Xt = jnp.asarray(np.asarray(ds.X.T, np.float32))
+    y = jnp.asarray(np.asarray(ds.y, np.float32))
+    key = jax.random.PRNGKey(0)
+    base = dict(delta=100.0, kappa=128, sampling="uniform",
+                max_iters=400, tol=0.0, patience=10**9)
+
+    def best_of(cfg) -> float:
+        engine.solve(LASSO, Xt, y, cfg, key).alpha.block_until_ready()  # compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            engine.solve(LASSO, Xt, y, cfg, key).alpha.block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_off = best_of(FWConfig(**base))
+    t_on = best_of(FWConfig(**base, telemetry=TelemetrySpec(capacity=256)))
+    return (t_on / t_off - 1.0) * 100.0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out-dir", default="reports")
+    ap.add_argument("--skip-distributed", action="store_true",
+                    help="drop the 4-device subprocess run (constrained "
+                         "sandboxes)")
+    args = ap.parse_args(argv)
+
+    import scripts.solver_report as solver_report
+    from repro.obs import validate_chrome_trace
+
+    # 1. traced solves -> report + trace artifacts (validates internally)
+    report_args = ["--out-dir", args.out_dir, "--backends", "xla,sparse",
+                   "--iters", "150", "--p", "512", "--m", "128"]
+    if not args.skip_distributed:
+        report_args.append("--distributed")
+    rc = solver_report.main(report_args)
+    if rc != 0:
+        print("FAIL: solver_report did not produce a valid trace")
+        return rc
+
+    # 2. the on-disk artifacts must load and validate standalone
+    trace_path = os.path.join(args.out_dir, "solver_trace.json")
+    with open(trace_path) as fh:
+        errors = validate_chrome_trace(fh.read())
+    if errors:
+        print("FAIL: written trace invalid:", *errors, sep="\n  ")
+        return 1
+    with open(os.path.join(args.out_dir, "solver_report.json")) as fh:
+        report = json.load(fh)
+    backends = {run.get("backend") for run in report.get("runs", [])}
+    want = {"xla", "sparse"} | (
+        set() if args.skip_distributed else {"distributed"}
+    )
+    if not want <= backends:
+        print(f"FAIL: report missing backends: {sorted(want - backends)}")
+        return 1
+    print(f"# trace + report artifacts valid ({sorted(backends)})")
+
+    # 3. hotloop overhead budget
+    pct = overhead_gate()
+    print(f"# telemetry-on hotloop overhead: {pct:+.1f}% "
+          f"(budget {OVERHEAD_PCT:.0f}%)")
+    if pct > OVERHEAD_PCT:
+        print("FAIL: telemetry overhead exceeds budget")
+        return 1
+    print("# telemetry smoke PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

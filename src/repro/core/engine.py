@@ -65,6 +65,7 @@ fused uniform-lasso trajectory bit-identical to fuse_steps=1.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, NamedTuple, Optional
 
@@ -73,6 +74,7 @@ import jax.numpy as jnp
 
 from repro.core import vertex
 from repro.core.solver_config import FWConfig
+from repro.obs import telemetry as obs_telemetry
 from repro.kernels.colstats.colstats import colstats as _colstats_kernel
 from repro.sparse import ops as sparse_ops
 from repro.sparse.matrix import SparseBlockMatrix
@@ -103,6 +105,11 @@ class EngineState(NamedTuple):
     # the active-set buffer for away/pairwise, (alpha_prev, X alpha_prev)
     # for partan, (winner cache, phi) for lazy
     rule: Any = ()
+    # telemetry ring (DESIGN.md §Observability): () when
+    # cfg.telemetry is None — a leafless pytree, so the default loop
+    # carry (and jaxpr) is unchanged — else an obs.TelemetryRing filled
+    # per iteration by the step / step rules / fused replay
+    tel: Any = ()
 
 
 class SolveResult(NamedTuple):
@@ -119,6 +126,10 @@ class SolveResult(NamedTuple):
     # non-classic step rules / non-fusable oracles fall back) — callers
     # can tell what actually ran without re-deriving the gating
     effective_fuse_steps: Optional[jax.Array] = None
+    # the final telemetry ring when cfg.telemetry is set (None otherwise);
+    # lane-axis-batched from solve_batched. Decode on the host with
+    # obs.telemetry.ring_to_records
+    telemetry: Optional[Any] = None
 
 
 def precompute_colstats(
@@ -199,6 +210,9 @@ def init_state(oracle, Xt, y, key, alpha0=None, cfg=None, p=None) -> EngineState
         rule_state = step_rule_lib.get_rule(cfg).init_state(
             oracle, cfg, beta, co, y
         )
+    tel: Any = ()
+    if cfg is not None and cfg.telemetry is not None:
+        tel = obs_telemetry.init_ring(cfg.telemetry)
     return EngineState(
         beta=beta,
         scale=jnp.ones((), dtype),
@@ -210,6 +224,7 @@ def init_state(oracle, Xt, y, key, alpha0=None, cfg=None, p=None) -> EngineState
         k=jnp.zeros((), jnp.int32),
         key=key,
         rule=rule_state,
+        tel=tel,
     )
 
 
@@ -284,6 +299,29 @@ def step(oracle, Xt, y, stats, state: EngineState, cfg: FWConfig, delta) -> Engi
         state.k, cfg, aux,
     )
 
+    n_dots = state.n_dots + n_scored + oracle.extra_dots
+    tel = state.tel
+    if cfg is not None and cfg.telemetry is not None:
+        # sampled FW duality gap -<grad, delta_t e_i - alpha> =
+        # <grad, alpha> - delta_t * sel_i — for the closed-form oracles
+        # this IS the line-search numerator (O(1) scalars; logistic pays
+        # one O(m) reduction per recorded objective)
+        if cfg.telemetry.record_objective:
+            gap = (
+                oracle.grad_dot_alpha(
+                    state.co, stats, y, state.beta, state.scale, cfg
+                )
+                - delta_t * g_sel
+            )
+            objective = oracle.objective(y, stats, co, cfg)
+        else:
+            gap = objective = jnp.nan
+        tel = obs_telemetry.record(
+            tel, k=state.k, i_star=i_star, event=obs_telemetry.EVENT_FW,
+            lam=lam, gap=gap, objective=objective, step_inf=step_inf,
+            stall=stall, n_dots=n_dots,
+        )
+
     return EngineState(
         beta=beta,
         scale=scale,
@@ -291,10 +329,11 @@ def step(oracle, Xt, y, stats, state: EngineState, cfg: FWConfig, delta) -> Engi
         maxabs=maxabs,
         step_inf=step_inf,
         stall=stall,
-        n_dots=state.n_dots + n_scored + oracle.extra_dots,
+        n_dots=n_dots,
         k=state.k + 1,
         key=key,
         rule=state.rule,
+        tel=tel,
     )
 
 
@@ -347,23 +386,38 @@ def _fused_replay(oracle, state: EngineState, cfg: FWConfig, i_stars, lams,
     updates and the stopping statistics — through the SAME
     ``apply_coeff_update`` the unfused step runs, which is what keeps
     the fused lasso trajectory bit-identical to fuse_steps=1. Steps at
-    k >= max_iters are skipped (max_iters never overshoots)."""
+    k >= max_iters are skipped (max_iters never overshoots).
+
+    With telemetry on, the replay is also where the megakernel's
+    per-step records are plumbed into the ring (one record per live
+    step; objective/gap are NaN here — the kernel emits no per-step
+    objective, which is why ``record_objective`` routes the chunk to the
+    fori-of-step executor instead)."""
+    telemetry_on = cfg.telemetry is not None
+    per_step_dots = cfg.kappa + oracle.extra_dots
 
     def apply(c, t):
-        beta, scale, maxabs, step_inf, stall, k = c
+        beta, scale, maxabs, step_inf, stall, k, tel = c
         i_star, lam, delta_t = i_stars[t], lams[t], delta_ts[t]
         a_star = scale * beta[i_star]
         beta, scale, maxabs, step_inf, stall = apply_coeff_update(
             beta, scale, maxabs, stall, a_star, i_star, lam, delta_t,
             no_progs[t], cfg,
         )
-        return beta, scale, maxabs, step_inf, stall, k + 1
+        if telemetry_on:
+            tel = obs_telemetry.record(
+                tel, k=k, i_star=i_star, event=obs_telemetry.EVENT_FW,
+                lam=lam, gap=jnp.nan, objective=jnp.nan, step_inf=step_inf,
+                stall=stall,
+                n_dots=state.n_dots + (k + 1 - state.k) * per_step_dots,
+            )
+        return beta, scale, maxabs, step_inf, stall, k + 1, tel
 
     def body(t, c):
         return jax.lax.cond(c[5] < cfg.max_iters, lambda: apply(c, t), lambda: c)
 
     init = (state.beta, state.scale, state.maxabs, state.step_inf,
-            state.stall, state.k)
+            state.stall, state.k, state.tel)
     return jax.lax.fori_loop(0, cfg.fuse_steps, body, init)
 
 
@@ -384,7 +438,7 @@ def _fused_kernel_chunk(oracle, Xt_run, y, stats, state: EngineState,
             state.k, delta, cfg,
         )
     )
-    beta, scale, maxabs, step_inf, stall, k_new = _fused_replay(
+    beta, scale, maxabs, step_inf, stall, k_new, tel = _fused_replay(
         oracle, state, cfg, i_stars, lams, delta_ts, no_progs
     )
     co = oracle.fused_unpack_co(resid_out.astype(resid0.dtype), scal_out)
@@ -416,6 +470,7 @@ def _fused_kernel_chunk(oracle, Xt_run, y, stats, state: EngineState,
         k=k_new,
         key=key_new,
         rule=state.rule,
+        tel=tel,
     )
 
 
@@ -440,8 +495,15 @@ def _fused_ref_chunk(oracle, Xt_run, y, stats, state: EngineState,
 def fused_chunk(oracle, Xt_run, y, stats, state: EngineState, cfg: FWConfig,
                 delta) -> EngineState:
     """Advance K = cfg.fuse_steps iterations in one dispatch (megakernel
-    on the kernel backends, fori_loop of ``step`` elsewhere)."""
-    if vertex.use_fused_kernel(cfg):
+    on the kernel backends, fori_loop of ``step`` elsewhere).
+
+    ``telemetry.record_objective`` routes kernel backends to the
+    fori-of-step executor too: the megakernel's per-step records carry
+    (i_star, lam, stall) but no objective/gap scalars, and the ref
+    executor is bit-identical by construction — chunked dispatch (and
+    its K-fold stopping-check savings) is preserved either way."""
+    needs_per_step = cfg.telemetry is not None and cfg.telemetry.record_objective
+    if vertex.use_fused_kernel(cfg) and not needs_per_step:
         return _fused_kernel_chunk(oracle, Xt_run, y, stats, state, cfg, delta)
     return _fused_ref_chunk(oracle, Xt_run, y, stats, state, cfg, delta)
 
@@ -490,31 +552,41 @@ def run_loop(oracle, Xt_run, y, stats, state0, cfg, delta, patience):
     stays exact — trailing chunk steps are masked; DESIGN.md §Stopping).
     """
     fused = vertex.fused_supported(oracle, cfg)
+    spec = cfg.telemetry if cfg is not None else None
+    # host streaming is a sequential-single-device feature: the batched
+    # driver keeps lane rings device-resident, and under shard_map a
+    # callback would fire per mesh cell
+    stream = (
+        spec is not None
+        and spec.stream_to is not None
+        and cfg.backend != "distributed"
+    )
 
     def cond(state: EngineState):
         return (state.k < cfg.max_iters) & (state.stall < patience)
 
     def body(state: EngineState):
         if fused:
-            return fused_chunk(oracle, Xt_run, y, stats, state, cfg, delta)
-        return rule_step(oracle, Xt_run, y, stats, state, cfg, delta)
+            new = fused_chunk(oracle, Xt_run, y, stats, state, cfg, delta)
+        else:
+            new = rule_step(oracle, Xt_run, y, stats, state, cfg, delta)
+        if stream:
+            # chunk-boundary flush (fires only when the ring would wrap;
+            # jax.debug.callback — no blocking host sync in the loop)
+            new = new._replace(
+                tel=obs_telemetry.stream_flush(new.tel, spec, final=False)
+            )
+        return new
 
     return jax.lax.while_loop(cond, body, state0)
 
 
-def history_loop(oracle, Xt_run, y, stats, state0, cfg, n_iters: int):
-    """The fixed-iteration scan shared by ``solve_with_history`` and the
-    distributed driver; returns (final state, per-step objectives).
-    Always per-step (``fuse_steps`` is ignored): the whole point is one
-    objective sample per iteration."""
-
-    def body(state, _):
-        new = rule_step(
-            oracle, Xt_run, y, stats, state, cfg, jnp.asarray(cfg.delta)
-        )
-        return new, oracle.objective(y, stats, new.co, cfg)
-
-    return jax.lax.scan(body, state0, None, length=n_iters)
+def history_patience(n_iters: int) -> int:
+    """The patience ``solve_with_history`` runs the loop with: stall can
+    reach at most n_iters, so n_iters + 1 never stops early — the run
+    executes exactly n_iters steps (the old fixed-length scan's
+    semantics) while still going through the ONE shared ``run_loop``."""
+    return int(n_iters) + 1
 
 
 def _effective_fuse_steps(oracle, cfg) -> int:
@@ -536,6 +608,15 @@ def _result(
         gap = certified_gap(
             oracle, Xt, y, final.co, final.beta, final.scale, delta, cfg
         )
+    tel = None
+    if cfg is not None and cfg.telemetry is not None:
+        tel = final.tel
+        if (
+            cfg.telemetry.stream_to is not None
+            and cfg.backend != "distributed"
+        ):
+            # drain whatever the chunk-boundary flushes haven't shipped
+            tel = obs_telemetry.stream_flush(tel, cfg.telemetry, final=True)
     return SolveResult(
         alpha=alpha,
         objective=oracle.objective(y, stats, final.co, cfg),
@@ -547,6 +628,7 @@ def _result(
         effective_fuse_steps=jnp.asarray(
             _effective_fuse_steps(oracle, cfg), jnp.int32
         ),
+        telemetry=tel,
     )
 
 
@@ -585,14 +667,31 @@ def solve_with_history(
     alpha0: Optional[jax.Array] = None,
 ):
     """Fixed-iteration run recording the objective per step (convergence
-    plots). Returns (result, objective_history[n_iters])."""
-    vertex.check_matrix_backend(Xt, cfg)
-    stats = precompute_colstats(Xt, y, cfg) if oracle.needs_stats else None
-    state0 = init_state(oracle, Xt, y, key, alpha0, cfg)
-    Xt_run = vertex.pad_backend_matrix(Xt, cfg)
-    final, hist = history_loop(oracle, Xt_run, y, stats, state0, cfg, n_iters)
+    plots). Returns (result, objective_history[n_iters]).
+
+    Implemented ON the telemetry ring (DESIGN.md §Observability): the
+    run is ``run_loop`` with a capacity-``n_iters`` history ring and
+    ``history_patience`` (never stops early), so the step sequence is
+    the regular solver's — fused chunks included, via the bit-identical
+    fori-of-step executor that ``record_objective`` forces — and the
+    history is ``telemetry.objective`` in iteration order (capacity ==
+    n_iters means the ring never wraps: slot t is iteration t)."""
+    hcfg = dataclasses.replace(
+        cfg,
+        max_iters=n_iters,
+        telemetry=obs_telemetry.history_spec(cfg.telemetry, n_iters),
+    )
+    vertex.check_matrix_backend(Xt, hcfg)
+    stats = precompute_colstats(Xt, y, hcfg) if oracle.needs_stats else None
+    state0 = init_state(oracle, Xt, y, key, alpha0, hcfg)
+    Xt_run = vertex.pad_backend_matrix(Xt, hcfg)
     delta = jnp.asarray(cfg.delta)
-    return _result(oracle, Xt_run, y, stats, final, _patience(cfg), cfg, delta), hist
+    final = run_loop(
+        oracle, Xt_run, y, stats, state0, hcfg, delta, history_patience(n_iters)
+    )
+    hist = final.tel.objective[:n_iters]
+    res = _result(oracle, Xt_run, y, stats, final, _patience(cfg), hcfg, delta)
+    return res, hist
 
 
 def _lane_mask(active: jax.Array, leaf: jax.Array) -> jax.Array:
@@ -660,6 +759,8 @@ def batched_result(oracle, Xt_run, y, stats, final, patience, cfg, deltas):
         effective_fuse_steps=jnp.asarray(
             _effective_fuse_steps(oracle, cfg), jnp.int32
         ),
+        # lane-stacked rings (leading lane axis on every field)
+        telemetry=final.tel if cfg.telemetry is not None else None,
     )
 
 

@@ -34,6 +34,8 @@ import numpy as np
 
 from repro.core import baselines, engine, fw_lasso
 from repro.core.solver_config import CDConfig, FISTAConfig, FWConfig
+from repro.obs import monitor as obs_monitor
+from repro.obs import trace as obs_trace
 from repro.sparse import ops as sparse_ops
 from repro.sparse.matrix import SparseBlockMatrix
 
@@ -127,38 +129,49 @@ def fw_path(
     key = jax.random.PRNGKey(seed)
     alpha = None
     points = []
+    tracer = obs_trace.get_tracer()
+    mon = obs_monitor.StepMonitor()
     t_total = time.perf_counter()
     total_dots = 0
     total_iters = 0
     cfg = base_cfg  # delta passes as a traced arg: ONE compile per path
-    for d in deltas:
-        if alpha is not None:
-            l1 = float(jnp.sum(jnp.abs(alpha)))
-            if l1 > 1e-12:
-                alpha = alpha * (float(d) / l1)  # paper's rescaling heuristic
-        key, sub = jax.random.split(key)
-        t0 = time.perf_counter()
-        res = solve_fn(oracle, Xt, y, cfg, sub, alpha, float(d))
-        res.alpha.block_until_ready()
-        dt = time.perf_counter() - t0
-        alpha = res.alpha
-        idx, val = _sparsify(alpha)
-        points.append(
-            PathPoint(
-                reg=float(d),
-                objective=float(res.objective),
-                l1=float(jnp.sum(jnp.abs(alpha))),
-                active=int(res.active),
-                iterations=int(res.iterations),
-                n_dots=int(res.n_dots),
-                seconds=dt,
-                alpha_nnz_idx=idx,
-                alpha_nnz_val=val,
-                gap=_point_gap(res.gap),
+    with tracer.span("fw_path", cat="path", n_points=len(deltas),
+                     backend=cfg.backend, rule=cfg.step_rule):
+        for d in deltas:
+            if alpha is not None:
+                l1 = float(jnp.sum(jnp.abs(alpha)))
+                if l1 > 1e-12:
+                    alpha = alpha * (float(d) / l1)  # paper's rescaling heuristic
+            key, sub = jax.random.split(key)
+            mon.begin()
+            t0 = time.perf_counter()
+            with tracer.span("fw_path/point", cat="path", delta=float(d)):
+                res = solve_fn(oracle, Xt, y, cfg, sub, alpha, float(d))
+                res.alpha.block_until_ready()
+            dt = time.perf_counter() - t0
+            # the first grid point pays the path's one compile; EWMA
+            # straggler detection flags anything else that stalls
+            if mon.end() and mon.step > 1:
+                tracer.instant("fw_path/straggler_point", cat="path",
+                               point=mon.step, seconds=dt)
+            alpha = res.alpha
+            idx, val = _sparsify(alpha)
+            points.append(
+                PathPoint(
+                    reg=float(d),
+                    objective=float(res.objective),
+                    l1=float(jnp.sum(jnp.abs(alpha))),
+                    active=int(res.active),
+                    iterations=int(res.iterations),
+                    n_dots=int(res.n_dots),
+                    seconds=dt,
+                    alpha_nnz_idx=idx,
+                    alpha_nnz_val=val,
+                    gap=_point_gap(res.gap),
+                )
             )
-        )
-        total_dots += int(res.n_dots)
-        total_iters += int(res.iterations)
+            total_dots += int(res.n_dots)
+            total_iters += int(res.iterations)
     return PathResult(points, time.perf_counter() - t_total, total_dots, total_iters)
 
 
@@ -211,48 +224,60 @@ def fw_path_batched(
     p = Xt.shape[0]
     carry = jnp.zeros((p,), Xt.dtype)  # densest solution seen so far
     points: List[Optional[PathPoint]] = [None] * n
+    tracer = obs_trace.get_tracer()
+    lanes_mon = obs_monitor.LaneProgressMonitor(max_iters=base_cfg.max_iters)
     t_total = time.perf_counter()
     total_dots = 0
     total_iters = 0
     total_saved = 0
-    for c in range(n_chunks):
-        chunk = padded[c * lane_width : (c + 1) * lane_width]
-        d_arr = jnp.asarray(chunk, Xt.dtype)
-        l1 = jnp.sum(jnp.abs(carry))
-        # per-lane rescaling warm start; carry == 0 (first chunk) stays 0
-        alpha0s = carry[None, :] * (d_arr / jnp.maximum(l1, 1e-12))[:, None]
-        key, *subs = jax.random.split(key, lane_width + 1)
-        t0 = time.perf_counter()
-        res, _ = solve_batched_fn(
-            oracle, Xt, y, base_cfg, jnp.stack(subs), alpha0s, d_arr
-        )
-        res.alpha.block_until_ready()
-        dt = time.perf_counter() - t0
-        carry = res.alpha[-1]
-        alphas = np.asarray(res.alpha)
-        real_lanes = min(lane_width, n - c * lane_width)  # ragged final chunk
-        # pruning win for the REAL lanes only: iterations each was spared
-        # while the chunk's while_loop kept running for slower lanes (the
-        # engine's own count would also include the phantom padded lanes)
-        iters = np.asarray(res.iterations)
-        total_saved += int(np.sum(iters.max() - iters[:real_lanes]))
-        for i in range(real_lanes):
-            g = c * lane_width + i
-            idx, val = _sparsify(alphas[i])
-            points[g] = PathPoint(
-                reg=float(chunk[i]),
-                objective=float(res.objective[i]),
-                l1=float(np.sum(np.abs(alphas[i]))),
-                active=int(res.active[i]),
-                iterations=int(res.iterations[i]),
-                n_dots=int(res.n_dots[i]),
-                seconds=dt / real_lanes,
-                alpha_nnz_idx=idx,
-                alpha_nnz_val=val,
-                gap=_point_gap(res.gap, i),
+    with tracer.span("fw_path_batched", cat="path", n_points=n,
+                     lane_width=lane_width, n_chunks=n_chunks,
+                     backend=base_cfg.backend):
+        for c in range(n_chunks):
+            chunk = padded[c * lane_width : (c + 1) * lane_width]
+            d_arr = jnp.asarray(chunk, Xt.dtype)
+            l1 = jnp.sum(jnp.abs(carry))
+            # per-lane rescaling warm start; carry == 0 (first chunk) stays 0
+            alpha0s = carry[None, :] * (d_arr / jnp.maximum(l1, 1e-12))[:, None]
+            key, *subs = jax.random.split(key, lane_width + 1)
+            lanes_mon.begin_chunk()
+            t0 = time.perf_counter()
+            with tracer.span("fw_path_batched/chunk", cat="path", chunk=c):
+                res, _ = solve_batched_fn(
+                    oracle, Xt, y, base_cfg, jnp.stack(subs), alpha0s, d_arr
+                )
+                res.alpha.block_until_ready()
+            dt = time.perf_counter() - t0
+            carry = res.alpha[-1]
+            alphas = np.asarray(res.alpha)
+            real_lanes = min(lane_width, n - c * lane_width)  # ragged final chunk
+            # pruning win for the REAL lanes only: iterations each was spared
+            # while the chunk's while_loop kept running for slower lanes (the
+            # engine's own count would also include the phantom padded lanes)
+            iters = np.asarray(res.iterations)
+            chunk_saved = int(np.sum(iters.max() - iters[:real_lanes]))
+            total_saved += chunk_saved
+            lanes_mon.end_chunk(
+                c, chunk[:real_lanes], iters[:real_lanes], chunk_saved,
+                np.asarray(res.converged)[:real_lanes],
             )
-            total_dots += int(res.n_dots[i])
-            total_iters += int(res.iterations[i])
+            for i in range(real_lanes):
+                g = c * lane_width + i
+                idx, val = _sparsify(alphas[i])
+                points[g] = PathPoint(
+                    reg=float(chunk[i]),
+                    objective=float(res.objective[i]),
+                    l1=float(np.sum(np.abs(alphas[i]))),
+                    active=int(res.active[i]),
+                    iterations=int(res.iterations[i]),
+                    n_dots=int(res.n_dots[i]),
+                    seconds=dt / real_lanes,
+                    alpha_nnz_idx=idx,
+                    alpha_nnz_val=val,
+                    gap=_point_gap(res.gap, i),
+                )
+                total_dots += int(res.n_dots[i])
+                total_iters += int(res.iterations[i])
     return PathResult(
         points,
         time.perf_counter() - t_total,

@@ -4,6 +4,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+# obs.telemetry is import-clean of repro.core, so the spec can live with
+# the observability layer while riding inside the static config key here
+from repro.obs.telemetry import TelemetrySpec
+
 
 @dataclass(frozen=True)
 class DistSpec:
@@ -102,6 +106,15 @@ class FWConfig:
         (a fixed-size index buffer; weakest-|beta| slot is evicted when
         a new FW atom enters a full buffer).
       lazy_cache: winner-cache capacity for the 'lazy' LMO wrapper.
+      telemetry: device-side metric-ring spec (DESIGN.md §Observability;
+        ``repro.obs.TelemetrySpec``). None (default) means telemetry is
+        OFF and every recording site is absent from the compiled
+        program, so default trajectories stay bit-identical to the
+        pre-telemetry engine. When set, ``EngineState`` carries a
+        per-iteration ring surfaced on ``SolveResult.telemetry``; with
+        ``record_objective`` the fused megakernel chunk falls back to
+        the bit-identical fori-of-step executor (the kernel has no
+        per-step objective output).
     """
 
     delta: float
@@ -126,6 +139,7 @@ class FWConfig:
     step_rule: str = "classic"
     active_set_size: int = 32
     lazy_cache: int = 16
+    telemetry: Optional[TelemetrySpec] = None
 
     def __post_init__(self):
         # fail at construction with the valid vocabulary, not deep in

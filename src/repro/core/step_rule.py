@@ -78,6 +78,7 @@ import jax.numpy as jnp
 from repro.core import engine, vertex
 from repro.core.engine import EngineState
 from repro.core.solver_config import FWConfig
+from repro.obs import telemetry as obs_telemetry
 
 # approximate per-step O(m)-work surcharge of the generalized-direction
 # rules (two column materializations + the u-vector dots), in length-m
@@ -313,6 +314,52 @@ class DirRule:
         took_fw = (df != 0.0) & (g > 0.0)
         buf = jnp.where(took_fw, insert_active(buf, i_f, beta), buf)
 
+        n_dots = (
+            state.n_dots
+            + n_scored
+            + buf.shape[0]
+            + DIR_EXTRA_DOTS
+            + oracle.extra_dots
+        )
+        tel = state.tel
+        if cfg.telemetry is not None:
+            drop = (da != 0.0) & (g >= ds.g_max) & (ds.same == 0.0)
+            alt = (
+                obs_telemetry.EVENT_PAIRWISE
+                if self.pairwise
+                else obs_telemetry.EVENT_AWAY
+            )
+            event = jnp.where(
+                drop,
+                obs_telemetry.EVENT_DROP,
+                jnp.where(use_alt, alt, obs_telemetry.EVENT_FW),
+            )
+            if cfg.telemetry.record_objective:
+                if self.pairwise:
+                    # away computes ga above; pairwise only pays for it
+                    # when the ring wants the gap
+                    ga = oracle.grad_dot_alpha(
+                        state.co, stats, y, state.beta, state.scale, cfg
+                    )
+                # the classic sampled FW duality gap — the rules' common
+                # convergence yardstick regardless of direction taken
+                gap = ga - df_fw * sel_f
+                objective = oracle.objective(y, stats, co, cfg)
+            else:
+                gap = objective = jnp.nan
+            tel = obs_telemetry.record(
+                tel,
+                k=state.k,
+                i_star=jnp.where(use_alt, i_a, i_f),
+                event=event,
+                lam=g,
+                gap=gap,
+                objective=objective,
+                step_inf=step_inf,
+                stall=stall,
+                n_dots=n_dots,
+            )
+
         return EngineState(
             beta=beta,
             scale=scale,
@@ -320,14 +367,11 @@ class DirRule:
             maxabs=maxabs,
             step_inf=step_inf,
             stall=stall,
-            n_dots=state.n_dots
-            + n_scored
-            + buf.shape[0]
-            + DIR_EXTRA_DOTS
-            + oracle.extra_dots,
+            n_dots=n_dots,
             k=state.k + 1,
             key=key,
             rule=buf,
+            tel=tel,
         )
 
 
@@ -404,6 +448,26 @@ class PartanRule:
         stall = jnp.where(
             (step_inf <= cfg.tol) | no_prog_mid, state.stall + 1, 0
         )
+        n_dots = (
+            mid.n_dots
+            + PARTAN_EXTRA_DOTS
+            + jnp.where(refresh, a_new.shape[0], 0)
+        )
+        tel = mid.tel
+        if cfg.telemetry is not None:
+            # the classic half-step already pushed this iteration's
+            # record inside engine.step — amend it in place (the ring
+            # stays one record per iteration) with the post-extrapolation
+            # truth; gap stays the mid-step's sampled FW gap
+            fields = dict(
+                event=obs_telemetry.EVENT_PARTAN,
+                step_inf=step_inf,
+                stall=stall,
+                n_dots=n_dots,
+            )
+            if cfg.telemetry.record_objective:
+                fields["objective"] = oracle.objective(y, stats, co, cfg)
+            tel = obs_telemetry.amend_last(tel, **fields)
         return EngineState(
             beta=a_new,
             scale=jnp.ones((), a_new.dtype),
@@ -411,12 +475,11 @@ class PartanRule:
             maxabs=jnp.max(jnp.abs(a_new)),
             step_inf=step_inf,
             stall=stall,
-            n_dots=mid.n_dots
-            + PARTAN_EXTRA_DOTS
-            + jnp.where(refresh, a_new.shape[0], 0),
+            n_dots=n_dots,
             k=mid.k,
             key=mid.key,
             rule=(a_new, v_new, drift),
+            tel=tel,
         )
 
 
@@ -505,6 +568,33 @@ class LazyRule:
             Xt, y, stats, state.co, beta, scale, i_star, a_star, lam,
             delta_t, state.k, cfg, aux,
         )
+        n_dots = state.n_dots + n_scored + 1 + oracle.extra_dots
+        tel = state.tel
+        if cfg.telemetry is not None:
+            objective = (
+                oracle.objective(y, stats, co, cfg)
+                if cfg.telemetry.record_objective
+                else jnp.nan
+            )
+            tel = obs_telemetry.record(
+                tel,
+                k=state.k,
+                i_star=i_star,
+                event=jnp.where(
+                    hit,
+                    obs_telemetry.EVENT_LAZY_HIT,
+                    obs_telemetry.EVENT_FW,
+                ),
+                lam=lam,
+                # == ga - delta_t * g_sel: the classic record's gap
+                # formula, which here is also the lazy acceptance
+                # currency (free — ga is always computed by this rule)
+                gap=ga + delta * jnp.abs(g_sel),
+                objective=objective,
+                step_inf=step_inf,
+                stall=stall,
+                n_dots=n_dots,
+            )
         return EngineState(
             beta=beta,
             scale=scale,
@@ -512,10 +602,11 @@ class LazyRule:
             maxabs=maxabs,
             step_inf=step_inf,
             stall=stall,
-            n_dots=state.n_dots + n_scored + 1 + oracle.extra_dots,
+            n_dots=n_dots,
             k=state.k + 1,
             key=key,
             rule=(cache_new, phi_new),
+            tel=tel,
         )
 
 

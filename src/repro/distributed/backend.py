@@ -32,8 +32,19 @@ import jax.numpy as jnp
 
 from repro.core import vertex
 from repro.core.solver_config import FWConfig
+from repro.obs import trace as obs_trace
 from repro.sparse import ops as sparse_ops
 from repro.sparse.matrix import SparseBlockMatrix
+
+
+def _count_collective(name: str):
+    """Trace-time collective counter: these functions run inside jit /
+    shard_map, so the counter fires once per collective SITE per compiled
+    program (NOT per executed iteration — XLA replays the compiled loop
+    without re-entering Python). That is exactly the comm-structure
+    audit a trace wants: how many psum/all_gather sites each program
+    carries, keyed by which primitive."""
+    obs_trace.get_tracer().counter(f"dist/collectives/{name}", 1)
 
 
 def _spec(cfg: FWConfig):
@@ -91,6 +102,7 @@ def dist_sample_vertex(
     every output replicated across the mesh.
     """
     spec = _spec(cfg)
+    _count_collective("score_psum")
     off, p_loc = feature_range(Xt_l, spec)
     is_sparse = isinstance(Xt_l, SparseBlockMatrix)
 
@@ -146,6 +158,7 @@ def dist_score_indices(Xt_l, w_l: jax.Array, idx: jax.Array, cfg: FWConfig):
     score psum extended to the away candidates, so every step rule runs
     under ``backend='distributed'`` with replicated selections."""
     spec = _spec(cfg)
+    _count_collective("rescore_psum")
     off, p_loc = feature_range(Xt_l, spec)
     raw = jax.lax.psum(
         _local_scores(Xt_l, w_l, idx, off, p_loc), _both_axes(spec)
@@ -193,6 +206,7 @@ def dist_column_update(Xt_l, v_l, y_l, i_star, lam, delta_t, cfg: FWConfig):
     a 1-data-shard mesh stays bit-identical to one device.
     """
     spec = _spec(cfg)
+    _count_collective("column_broadcast")
     if isinstance(Xt_l, SparseBlockMatrix):
         off, p_loc = feature_range(Xt_l, spec)
         own = (i_star >= off) & (i_star < off + p_loc)
@@ -210,6 +224,7 @@ def dist_column_update(Xt_l, v_l, y_l, i_star, lam, delta_t, cfg: FWConfig):
 def dist_column_dense(Xt_l, i_star, cfg: FWConfig) -> jax.Array:
     """Local (m_local,) slice of the dense winning column (the logistic
     bisection's direction vector)."""
+    _count_collective("column_broadcast")
     return _owned_column(Xt_l, i_star, _spec(cfg))
 
 
@@ -230,6 +245,7 @@ def dist_colstats(Xt_l, y_l: jax.Array, cfg: FWConfig, p: int):
     axis, all_gather over "model" to assemble the feature axis. One-time
     setup pass (§4.2) — O(nnz_local) compute, O(p) comm, once per solve."""
     spec = _spec(cfg)
+    _count_collective("colstats_gather")
     if isinstance(Xt_l, SparseBlockMatrix):
         vals = Xt_l.values.astype(jnp.float32)
         gathered = jnp.take(y_l.astype(jnp.float32), Xt_l.rows, axis=0)
@@ -265,6 +281,7 @@ def dist_matvec(Xt_l, beta: jax.Array, cfg: FWConfig) -> jax.Array:
     warm-start initialization. psum over "model" completes the feature
     sum."""
     spec = _spec(cfg)
+    _count_collective("matvec_psum")
     off, p_loc = feature_range(Xt_l, spec)
     b_l = _beta_slice(beta, off, p_loc, beta.shape[0]).astype(Xt_l.dtype)
     if isinstance(Xt_l, SparseBlockMatrix):
@@ -279,6 +296,7 @@ def dist_grad_full(Xt_l, w_l: jax.Array, cfg: FWConfig) -> jax.Array:
     axis (callers slice [:p]) — the certification pass behind the oracle
     ``gap()`` protocol. O(nnz_local) compute + one O(p) all_gather."""
     spec = _spec(cfg)
+    _count_collective("grad_gather")
     if isinstance(Xt_l, SparseBlockMatrix):
         vals = Xt_l.values.astype(jnp.float32)
         gathered = jnp.take(w_l.astype(jnp.float32), Xt_l.rows, axis=0)

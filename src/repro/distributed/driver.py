@@ -33,6 +33,8 @@ from repro.core.engine import ColStats
 from repro.core.solver_config import FWConfig
 from repro.distributed import backend as dbackend
 from repro.distributed.shard import ShardedOperand
+from repro.obs import telemetry as obs_telemetry
+from repro.obs import trace as obs_trace
 from repro.sparse.matrix import SparseBlockMatrix
 
 
@@ -128,14 +130,20 @@ def _solver(mesh, oracle, cfg: FWConfig, geom, mode: str, warm: bool,
             *mat_args, y_l, key, alpha0 = args
             Xt_l, stats = _prep(mat_args, y_l)
             state0 = _init(Xt_l, y_l, key, alpha0)
-            final, hist = engine.history_loop(
-                oracle, Xt_l, y_l, stats, state0, cfg, n_iters
+            # ring-based history (DESIGN.md §Observability): cfg already
+            # carries max_iters=n_iters + a capacity-n_iters ring (see
+            # solve_with_history below), and history_patience never
+            # stops early — the SAME run_loop as mode="solve" replays
+            # the old fixed-length scan's exact step sequence
+            final = engine.run_loop(
+                oracle, Xt_l, y_l, stats, state0, cfg,
+                jnp.asarray(cfg.delta), engine.history_patience(n_iters),
             )
             res = engine._result(
                 oracle, Xt_l, y_l, stats, final, patience, cfg,
                 jnp.asarray(cfg.delta),
             )
-            return res, hist
+            return res, final.tel.objective[:n_iters]
 
     elif mode == "batched":
 
@@ -164,6 +172,17 @@ def _solver(mesh, oracle, cfg: FWConfig, geom, mode: str, warm: bool,
     return jax.jit(mapped)
 
 
+def _traced_solver(*key):
+    """``_solver`` plus compile detection for the dispatch spans: returns
+    ``(fn, fresh)`` where ``fresh`` flags a new static key — the next
+    call pays trace + XLA compile, and the span that wraps it should say
+    so instead of letting a 100x first-call duration read as a collective
+    regression."""
+    before = _solver.cache_info().misses
+    fn = _solver(*key)
+    return fn, _solver.cache_info().misses > before
+
+
 def _alpha0_arr(op: ShardedOperand, alpha0):
     if alpha0 is None:
         return jnp.zeros((op.p,), op.dtype)
@@ -183,10 +202,13 @@ def solve(
     index stream; on a 1-data-shard mesh the sparse lasso run is
     bit-identical). All result leaves come back replicated."""
     dcfg = dist_config(cfg, op)
-    fn = _solver(op.mesh, oracle, dcfg, op.geom, "solve",
-                 alpha0 is not None, None)
+    fn, fresh = _traced_solver(op.mesh, oracle, dcfg, op.geom, "solve",
+                               alpha0 is not None, None)
     delta = jnp.asarray(cfg.delta if delta is None else delta)
-    return fn(*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0), delta)
+    with obs_trace.get_tracer().span(
+        "dist/solve", cat="dist", new_program=fresh, layout=op.geom[0],
+    ):
+        return fn(*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0), delta)
 
 
 def solve_with_history(
@@ -197,11 +219,22 @@ def solve_with_history(
     n_iters: int,
     alpha0: Optional[jax.Array] = None,
 ):
-    """Fixed-iteration distributed run recording the objective per step."""
+    """Fixed-iteration distributed run recording the objective per step
+    (through the telemetry ring — same machinery as the single-device
+    ``engine.solve_with_history``)."""
     dcfg = dist_config(cfg, op)
-    fn = _solver(op.mesh, oracle, dcfg, op.geom, "history",
-                 alpha0 is not None, int(n_iters))
-    return fn(*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0))
+    hcfg = dataclasses.replace(
+        dcfg,
+        max_iters=int(n_iters),
+        telemetry=obs_telemetry.history_spec(dcfg.telemetry, int(n_iters)),
+    )
+    fn, fresh = _traced_solver(op.mesh, oracle, hcfg, op.geom, "history",
+                               alpha0 is not None, int(n_iters))
+    with obs_trace.get_tracer().span(
+        "dist/solve_with_history", cat="dist", new_program=fresh,
+        n_iters=int(n_iters),
+    ):
+        return fn(*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0))
 
 
 def solve_batched(
@@ -217,9 +250,14 @@ def solve_batched(
     lane axis), so converged lanes freeze exactly as on one device.
     Returns ``(batched SolveResult, saved_iters)``."""
     dcfg = dist_config(cfg, op)
-    fn = _solver(op.mesh, oracle, dcfg, op.geom, "batched", True, None)
-    return fn(*op.matrix_args, op.y, keys, jnp.asarray(alpha0s, op.dtype),
-              jnp.asarray(deltas))
+    fn, fresh = _traced_solver(op.mesh, oracle, dcfg, op.geom, "batched",
+                               True, None)
+    with obs_trace.get_tracer().span(
+        "dist/solve_batched", cat="dist", new_program=fresh,
+        lanes=int(jnp.asarray(deltas).shape[0]),
+    ):
+        return fn(*op.matrix_args, op.y, keys, jnp.asarray(alpha0s, op.dtype),
+                  jnp.asarray(deltas))
 
 
 def fw_path(
@@ -299,6 +337,8 @@ def certified_gap(
     oracle ``gap()`` protocol run under shard_map)."""
     dcfg = dist_config(cfg, op)
     fn = _gap_fn(op.mesh, oracle, dcfg, op.geom)
-    return fn(
-        *op.matrix_args, op.y, jnp.asarray(alpha, op.dtype), jnp.asarray(delta)
-    )
+    with obs_trace.get_tracer().span("dist/certified_gap", cat="dist"):
+        return fn(
+            *op.matrix_args, op.y, jnp.asarray(alpha, op.dtype),
+            jnp.asarray(delta),
+        )

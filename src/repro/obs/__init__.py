@@ -1,0 +1,47 @@
+"""Solver observability layer (DESIGN.md §Observability).
+
+Three parts, all off the hot path by default:
+  * ``obs.telemetry`` — device-side per-iteration metric rings, carried
+    in ``EngineState`` when ``FWConfig.telemetry`` is set (telemetry off
+    keeps the default jaxpr bit-identical);
+  * ``obs.trace`` — host-side nested span tracing emitting
+    Chrome/Perfetto ``trace_event`` JSON plus an aggregate counter
+    table;
+  * ``obs.monitor`` / ``obs.report`` — EWMA straggler + lane-progress
+    monitoring (absorbed from ``runtime.monitor``) and markdown/JSON
+    run-report rendering (CLI: ``scripts/solver_report.py``).
+
+NOTE: ``repro.core.solver_config`` imports ``obs.telemetry``, so this
+package must stay import-clean of ``repro.core``.
+"""
+from repro.obs.monitor import LaneProgressMonitor, StepMonitor
+from repro.obs.report import build_report, render_markdown, write_report
+from repro.obs.telemetry import (
+    EVENT_AWAY,
+    EVENT_DROP,
+    EVENT_FW,
+    EVENT_LAZY_HIT,
+    EVENT_NAMES,
+    EVENT_PAIRWISE,
+    EVENT_PARTAN,
+    TelemetryRing,
+    TelemetrySpec,
+    register_sink,
+    ring_to_records,
+    unregister_sink,
+)
+from repro.obs.trace import (
+    Tracer,
+    get_tracer,
+    traced,
+    use_tracer,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "EVENT_AWAY", "EVENT_DROP", "EVENT_FW", "EVENT_LAZY_HIT", "EVENT_NAMES",
+    "EVENT_PAIRWISE", "EVENT_PARTAN", "LaneProgressMonitor", "StepMonitor",
+    "Tracer", "TelemetryRing", "TelemetrySpec", "build_report", "get_tracer",
+    "register_sink", "render_markdown", "ring_to_records", "traced",
+    "unregister_sink", "use_tracer", "validate_chrome_trace", "write_report",
+]

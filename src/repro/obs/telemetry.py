@@ -1,0 +1,232 @@
+"""Device-side metric rings (DESIGN.md §Observability).
+
+A ``TelemetryRing`` is a fixed-size buffer of per-iteration solver
+records — winner index, step size, step-rule event code, sampled duality
+gap, objective, stopping statistics, cumulative dot-product count —
+carried as an optional pytree slot in ``engine.EngineState`` and filled
+on-device inside the hot loop. Telemetry is OFF by default
+(``FWConfig.telemetry is None``): every recording site is gated at
+trace time, so the default jaxpr — and therefore every pinned golden
+trajectory — is unchanged, bit for bit.
+
+Overhead contract when ON: recording is O(1) scalar scatters per
+iteration plus (with ``record_objective``) the oracle's O(1)/O(m)
+objective and gap scalars; no host synchronization happens in the hot
+loop. Host flushes (``stream_to``) run through ``jax.debug.callback``
+only when the ring is about to wrap and once at the end of the solve —
+chunk/patience boundaries, never per step.
+
+The ring wraps: with ``capacity = C`` the last C records survive;
+``cursor`` counts ALL records ever written, so a wrapped ring still
+tells you the true iteration count and which slots are live.
+``ring_to_records`` gives the chronological host-side view.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# step-rule event codes (ring ``event`` field)
+EVENT_FW = 0  # classic Frank-Wolfe vertex step
+EVENT_AWAY = 1  # away-step over the tracked active set
+EVENT_PAIRWISE = 2  # pairwise mass transfer
+EVENT_DROP = 3  # away/pairwise step that hit g_max: atom dropped exactly
+EVENT_LAZY_HIT = 4  # lazy LMO served the step from the winner cache
+EVENT_PARTAN = 5  # classic step + PARTAN extrapolation
+
+EVENT_NAMES = ("fw", "away", "pairwise", "drop", "lazy-hit", "partan")
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Static telemetry config; hashable, rides inside ``FWConfig`` as
+    part of the jit key (a different spec is a different program — the
+    DEFAULT ``telemetry=None`` program is the pre-telemetry jaxpr).
+
+    Attributes:
+      capacity: ring slots; the last ``capacity`` iterations survive.
+      record_objective: record the oracle objective and the sampled FW
+        duality gap per step. O(1) scalars for lasso / elastic-net, one
+        O(m) reduction for logistic (an extra psum per step under the
+        distributed backend). When on, the fused megakernel chunk
+        executor is bypassed in favor of the bit-identical fori-of-step
+        executor (the kernel does not emit per-step objectives); with it
+        off the megakernel runs and the ring records the kernel's own
+        per-step (i_star, lam, stall) records with NaN objective/gap.
+      stream_to: name of a host sink registered via ``register_sink`` to
+        receive record batches at ring-wrap boundaries and once at the
+        end of the solve (``jax.debug.callback``; single-device
+        sequential solves only — the batched and distributed drivers
+        keep the ring device-resident and surface it on the result).
+    """
+
+    capacity: int = 256
+    record_objective: bool = True
+    stream_to: Optional[str] = None
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"telemetry capacity must be >= 1, got {self.capacity}")
+
+
+class TelemetryRing(NamedTuple):
+    """The device-side buffer. ``cursor``/``flushed`` are totals (not
+    modulo); array fields have shape (capacity,)."""
+
+    cursor: jax.Array  # () i32  records ever written
+    flushed: jax.Array  # () i32  records already streamed to the host sink
+    k: jax.Array  # (C,) i32  iteration index (-1 = empty slot)
+    i_star: jax.Array  # (C,) i32  winner coordinate
+    event: jax.Array  # (C,) i32  EVENT_* code
+    stall: jax.Array  # (C,) i32  stall counter AFTER the step
+    lam: jax.Array  # (C,) f32  step size (gamma for the direction rules)
+    gap: jax.Array  # (C,) f32  sampled FW duality gap (NaN when unrecorded)
+    objective: jax.Array  # (C,) f32  post-step objective (NaN when unrecorded)
+    step_inf: jax.Array  # (C,) f32  ||alpha_{k+1}-alpha_k||_inf bound
+    n_dots: jax.Array  # (C,) f32  cumulative dot-product count
+
+
+# names of the (C,)-shaped record fields, in TelemetryRing order
+RECORD_FIELDS = (
+    "k", "i_star", "event", "stall", "lam", "gap", "objective",
+    "step_inf", "n_dots",
+)
+_INT_FIELDS = frozenset(("k", "i_star", "event", "stall"))
+
+
+def init_ring(spec: TelemetrySpec) -> TelemetryRing:
+    c = spec.capacity
+    i0 = jnp.zeros((), jnp.int32)
+    return TelemetryRing(
+        cursor=i0,
+        flushed=i0,
+        k=jnp.full((c,), -1, jnp.int32),
+        i_star=jnp.full((c,), -1, jnp.int32),
+        event=jnp.zeros((c,), jnp.int32),
+        stall=jnp.zeros((c,), jnp.int32),
+        lam=jnp.full((c,), jnp.nan, jnp.float32),
+        gap=jnp.full((c,), jnp.nan, jnp.float32),
+        objective=jnp.full((c,), jnp.nan, jnp.float32),
+        step_inf=jnp.full((c,), jnp.nan, jnp.float32),
+        n_dots=jnp.full((c,), jnp.nan, jnp.float32),
+    )
+
+
+def _cast(name: str, value) -> jax.Array:
+    dt = jnp.int32 if name in _INT_FIELDS else jnp.float32
+    return jnp.asarray(value).astype(dt)
+
+
+def record(ring: TelemetryRing, **fields) -> TelemetryRing:
+    """Write one record at the cursor slot (wrapping) and advance. All
+    ops are O(1) scalar scatters — no host traffic."""
+    slot = jnp.mod(ring.cursor, ring.k.shape[0])
+    upd = {
+        name: getattr(ring, name).at[slot].set(_cast(name, fields[name]))
+        for name in RECORD_FIELDS
+    }
+    return ring._replace(cursor=ring.cursor + 1, **upd)
+
+
+def amend_last(ring: TelemetryRing, **fields) -> TelemetryRing:
+    """Overwrite fields of the most recent record in place (cursor does
+    NOT advance) — used by composite rules (PARTAN) whose inner classic
+    step already recorded and whose final statistics supersede it."""
+    slot = jnp.mod(ring.cursor - 1, ring.k.shape[0])
+    upd = {
+        name: getattr(ring, name).at[slot].set(_cast(name, value))
+        for name, value in fields.items()
+    }
+    return ring._replace(**upd)
+
+
+def history_spec(spec: Optional[TelemetrySpec], n_iters: int) -> TelemetrySpec:
+    """The spec ``solve_with_history`` runs under: capacity = n_iters
+    (slot t IS iteration t — no wrap) with per-step objectives on;
+    a caller-provided spec keeps its streaming sink."""
+    base = spec if spec is not None else TelemetrySpec()
+    return dataclasses.replace(
+        base, capacity=max(int(n_iters), 1), record_objective=True
+    )
+
+
+def ring_to_records(ring, limit: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Chronological host-side view of the live ring contents: a dict of
+    1-D numpy arrays (oldest surviving record first) plus the absolute
+    ``record_index`` of each row. Single ring only — index a lane axis
+    off a batched result before calling."""
+    cursor = int(np.asarray(ring.cursor))
+    cap = int(np.asarray(ring.k).shape[0])
+    n = min(cursor, cap)
+    if limit is not None:
+        n = min(n, int(limit))
+    start = cursor - n
+    idx = (start + np.arange(n)) % cap
+    out = {name: np.asarray(getattr(ring, name))[idx] for name in RECORD_FIELDS}
+    out["record_index"] = start + np.arange(n)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Host streaming sinks (jax.debug.callback flushes at wrap boundaries)
+# --------------------------------------------------------------------------
+
+_SINKS: Dict[str, Callable[[Dict[str, np.ndarray]], None]] = {}
+
+
+def register_sink(name: str, fn: Callable[[Dict[str, np.ndarray]], None]) -> None:
+    """Register a host callable receiving record batches (the dict format
+    of ``ring_to_records``) for ``TelemetrySpec(stream_to=name)``."""
+    _SINKS[name] = fn
+
+
+def unregister_sink(name: str) -> None:
+    _SINKS.pop(name, None)
+
+
+def _host_flush(sink_name: str, capacity: int):
+    def cb(cursor, flushed, *leaves):
+        fn = _SINKS.get(sink_name)
+        if fn is None:
+            return
+        cursor = int(cursor)
+        n = min(cursor - int(flushed), capacity)
+        if n <= 0:
+            return
+        start = cursor - n
+        idx = (start + np.arange(n)) % capacity
+        batch = {
+            name: np.asarray(leaf)[idx]
+            for name, leaf in zip(RECORD_FIELDS, leaves)
+        }
+        batch["record_index"] = start + np.arange(n)
+        fn(batch)
+
+    return cb
+
+
+def stream_flush(ring: TelemetryRing, spec: TelemetrySpec, *,
+                 final: bool) -> TelemetryRing:
+    """Flush unstreamed records to the spec's host sink. ``final=False``
+    flushes only when the ring is full of unflushed records (i.e. about
+    to wrap) — the chunk-boundary cadence; ``final=True`` flushes the
+    remainder unconditionally (end of solve / patience stop). Trace-time
+    no-op when the spec has no sink."""
+    if spec is None or spec.stream_to is None:
+        return ring
+    cb = _host_flush(spec.stream_to, spec.capacity)
+
+    def do(r: TelemetryRing) -> TelemetryRing:
+        fields = tuple(getattr(r, name) for name in RECORD_FIELDS)
+        jax.debug.callback(cb, r.cursor, r.flushed, *fields)
+        return r._replace(flushed=r.cursor)
+
+    if final:
+        return do(ring)
+    return jax.lax.cond(
+        ring.cursor - ring.flushed >= spec.capacity, do, lambda r: r, ring
+    )

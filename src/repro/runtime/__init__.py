@@ -1,4 +1,4 @@
 from repro.runtime.trainer import Trainer, TrainerConfig
-from repro.runtime.monitor import StepMonitor
+from repro.obs.monitor import StepMonitor
 
 __all__ = ["Trainer", "TrainerConfig", "StepMonitor"]

@@ -1,55 +1,19 @@
-"""Straggler / health monitoring for the training loop (DESIGN.md §6).
+"""Deprecated shim: ``repro.runtime.monitor`` moved to
+``repro.obs.monitor`` (DESIGN.md §Observability).
 
-On a real fleet this feeds the control plane (pod replacement, elastic
-downsizing). Here it implements the detection logic: EWMA step-time
-tracking, straggler flagging, and a heartbeat file other processes (or a
-supervisor) can watch.
+The EWMA straggler / heartbeat logic now lives with the rest of the
+observability layer — same ``StepMonitor`` API plus an injectable clock
+and a straggler flag in the heartbeat payload. Import from
+``repro.obs.monitor``; this module re-exports for back-compat and warns.
 """
 from __future__ import annotations
 
-import json
-import time
-from dataclasses import dataclass, field
-from pathlib import Path
-from typing import List, Optional
+import warnings
 
+from repro.obs.monitor import StepMonitor  # noqa: F401
 
-@dataclass
-class StepMonitor:
-    ewma_alpha: float = 0.1
-    straggler_factor: float = 3.0  # step > factor * ewma => flag
-    heartbeat_path: Optional[Path] = None
-
-    ewma: float = 0.0
-    last_step_time: float = 0.0
-    stragglers: List[int] = field(default_factory=list)
-    _t0: float = field(default=0.0, repr=False)
-    step: int = 0
-
-    def begin(self):
-        self._t0 = time.perf_counter()
-
-    def end(self) -> bool:
-        """Record a step; returns True if this step was a straggler."""
-        dt = time.perf_counter() - self._t0
-        self.last_step_time = dt
-        self.step += 1
-        is_straggler = False
-        if self.ewma > 0 and dt > self.straggler_factor * self.ewma:
-            self.stragglers.append(self.step)
-            is_straggler = True
-        self.ewma = dt if self.ewma == 0 else (
-            self.ewma_alpha * dt + (1 - self.ewma_alpha) * self.ewma
-        )
-        if self.heartbeat_path is not None:
-            self.heartbeat_path.write_text(
-                json.dumps(
-                    {
-                        "step": self.step,
-                        "t": time.time(),
-                        "step_time": dt,
-                        "ewma": self.ewma,
-                    }
-                )
-            )
-        return is_straggler
+warnings.warn(
+    "repro.runtime.monitor is deprecated; use repro.obs.monitor",
+    DeprecationWarning,
+    stacklevel=2,
+)

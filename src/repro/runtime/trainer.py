@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.models.config import ModelConfig
-from repro.runtime.monitor import StepMonitor
+from repro.obs.monitor import StepMonitor
 from repro.training import init_train_state, make_train_step
 
 

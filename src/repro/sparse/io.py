@@ -23,6 +23,7 @@ from typing import Iterator, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.trace import traced
 from repro.sparse.matrix import SparseBlockMatrix
 
 MANIFEST_NAME = "manifest.json"
@@ -44,6 +45,7 @@ class COOData(NamedTuple):
 # --------------------------------------------------------------------------
 
 
+@traced("sparse_io/load_svmlight", cat="io")
 def load_svmlight(
     path,
     *,
@@ -99,6 +101,7 @@ def load_svmlight(
     return COOData(rows_a, cols_a, vals_a, np.asarray(y, np.float32), (len(y), p))
 
 
+@traced("sparse_io/save_svmlight", cat="io")
 def save_svmlight(path, data: COOData, *, zero_based: bool = False) -> None:
     """Write COO triplets as svmlight text (1-based indices by default).
 
@@ -126,6 +129,7 @@ def save_svmlight(path, data: COOData, *, zero_based: bool = False) -> None:
 # --------------------------------------------------------------------------
 
 
+@traced("sparse_io/write_shards", cat="io")
 def write_shards(
     out_dir,
     data: COOData,
@@ -173,6 +177,7 @@ def write_shards(
     return manifest_path
 
 
+@traced("sparse_io/convert_svmlight_to_shards", cat="io")
 def convert_svmlight_to_shards(
     svm_path,
     out_dir,
@@ -318,6 +323,7 @@ def iter_shards_for_rows(
             ), off
 
 
+@traced("sparse_io/load_shards", cat="io")
 def load_shards(shard_dir) -> COOData:
     """Concatenate all shards back into one in-memory COO dataset."""
     manifest = read_manifest(shard_dir)
@@ -331,6 +337,7 @@ def load_shards(shard_dir) -> COOData:
     )
 
 
+@traced("sparse_io/load_shards_as_matrix", cat="io")
 def load_shards_as_matrix(
     shard_dir,
     *,

@@ -1,9 +1,20 @@
-"""Wall-clock timing helpers used by benchmarks and the runtime monitor."""
+"""Wall-clock timing helpers used by benchmarks and the runtime monitor.
+
+``timed`` no longer prints to stdout by default: every timed block lands
+on the active ``repro.obs.trace`` tracer as a completed ``"timed"`` span
+(so benchmark phases show up in the same Perfetto artifact as the solver
+spans), and ``sink`` optionally ALSO accumulates into a ``Timer`` or a
+legacy ``{label: seconds}`` dict. Pass ``verbose=True`` for the old
+print behavior — interleaving timings with CSV rows on stdout is now an
+explicit opt-in, not the default.
+"""
 from __future__ import annotations
 
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
+
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -26,14 +37,29 @@ class Timer:
     def mean(self) -> float:
         return self.total / max(self.count, 1)
 
+    def add(self, seconds: float, count: int = 1) -> "Timer":
+        self.total += seconds
+        self.count += count
+        return self
+
+    def merge(self, other: "Timer") -> "Timer":
+        """Fold another Timer into this one — benchmarks aggregate
+        per-arm timers with this instead of hand-rolled float dicts."""
+        return self.add(other.total, other.count)
+
 
 @contextmanager
-def timed(label: str, sink=None):
-    """Context manager printing (or collecting) elapsed time."""
+def timed(label: str, sink=None, verbose: bool = False):
+    """Time a block onto the active tracer (a ``ph:"X"`` span, cat
+    ``"timed"``). ``sink`` may be a ``Timer`` or a dict mapping label ->
+    accumulated seconds (the legacy shape)."""
     t0 = time.perf_counter()
     yield
     dt = time.perf_counter() - t0
-    if sink is not None:
+    obs_trace.get_tracer().complete(label, t0, dt, cat="timed")
+    if isinstance(sink, Timer):
+        sink.add(dt)
+    elif sink is not None:
         sink[label] = sink.get(label, 0.0) + dt
-    else:
+    if verbose:
         print(f"[timed] {label}: {dt:.4f}s")

@@ -23,7 +23,12 @@ Coverage (ISSUE 4 acceptance):
     under shard_map, so unlike the classic rule the parity is fp-level,
     not bitwise — the index streams and step kinds still agree);
   * a non-default ``fuse_steps`` warns once and the forced value is
-    surfaced on ``SolveResult.effective_fuse_steps``.
+    surfaced on ``SolveResult.effective_fuse_steps``;
+  * (ISSUE 7) the telemetry ring rides the sharded driver: telemetry off
+    vs on is bit-identical, the ring's step facts (k, i_star, event,
+    n_dots) match the single-device sparse ring bitwise, its objective
+    column matches to 1 ulp, and ``solve_with_history`` returns exactly
+    the ring's objective column.
 """
 import json
 import subprocess
@@ -150,6 +155,34 @@ SCRIPT = textwrap.dedent("""
     hr_s, hist_s = engine.solve_with_history(LASSO, mat, yj, as_sparse(cfg),
                                              key, 50)
     out["history"] = [np.asarray(hist_d).tolist(), np.asarray(hist_s).tolist()]
+
+    # ---- telemetry ring through the distributed driver (ISSUE 7) ----
+    from repro.obs import TelemetrySpec, ring_to_records
+    cfg_t = FWConfig(**{**cfg.__dict__, "max_iters": 60,
+                        "telemetry": TelemetrySpec(capacity=60)})
+    cfg_t_off = FWConfig(**{**cfg.__dict__, "max_iters": 60})
+    t_d = dist.solve(LASSO, op14, cfg_t, key)
+    t_off = dist.solve(LASSO, op14, cfg_t_off, key)
+    t_s = engine.solve(LASSO, mat, yj, as_sparse(cfg_t), key)
+    rec_d = ring_to_records(t_d.telemetry)
+    rec_s = ring_to_records(t_s.telemetry)
+    out["tel"] = {
+        # ring on/off must not move the sharded trajectory
+        "off_bitident": bool(
+            (np.asarray(t_d.alpha) == np.asarray(t_off.alpha)).all()),
+        # step facts match the single-device sparse ring bit for bit
+        "ring_bitident": {
+            f: bool((rec_d[f] == rec_s[f]).all())
+            for f in ("k", "i_star", "event", "n_dots", "record_index")
+        },
+        # scalar columns may pick up shard_map FMA fusion: ulp-level
+        "obj_curve": [np.asarray(rec_d["objective"]).tolist(),
+                      np.asarray(rec_s["objective"]).tolist()],
+        # solve_with_history IS the ring now; its result surfaces it
+        "hist_equals_ring": bool(
+            (np.asarray(hist_d)
+             == np.asarray(hr_d.telemetry.objective[:50])).all()),
+    }
 
     # ---- standalone certified gap: mesh == single device ----
     g_d = float(dist.certified_gap(LASSO, op14, r_d.alpha, 120.0, cfg))
@@ -296,6 +329,25 @@ class TestStepRulesOnMesh:
         assert r["l1"] <= 120.0 * (1 + 1e-4)
         # same sparsity structure: the rules agree on which atoms live
         assert r["active"][0] == r["active"][1], r
+
+
+class TestTelemetryOnMesh:
+    def test_telemetry_off_trajectory_unchanged(self, dist_result):
+        """Ring on vs off on the (1, 4) mesh: alpha bit-identical."""
+        assert dist_result["tel"]["off_bitident"]
+
+    def test_ring_step_facts_match_single_device(self, dist_result):
+        bitident = dist_result["tel"]["ring_bitident"]
+        assert all(bitident.values()), bitident
+
+    def test_ring_objective_curve_ulp_close(self, dist_result):
+        d, s = dist_result["tel"]["obj_curve"]
+        assert len(d) == len(s) == 60
+        for a, b in zip(d, s):
+            assert _ulp_close(a, b), (a, b)
+
+    def test_history_driver_is_the_ring(self, dist_result):
+        assert dist_result["tel"]["hist_equals_ring"]
 
 
 class TestForcedFuseSteps:
