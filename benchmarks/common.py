@@ -177,4 +177,18 @@ class BenchJSON:
         with open(self.path, "wt") as fh:
             json.dump(payload, fh, indent=2)
         print(f"# wrote {self.path} ({len(self.records)} records)", flush=True)
+        # perf trajectory: every run also appends one line to
+        # BENCH_history.jsonl (benchmarks/history.py), keyed by the
+        # provenance git sha — the bench gate's rolling baseline.
+        # Guarded: history must never fail a benchmark.
+        try:
+            from benchmarks import history as bench_history
+
+            if bench_history.history_enabled():
+                hp = bench_history.append_run(
+                    payload, os.path.basename(self.path)
+                )
+                print(f"# appended to {hp}", flush=True)
+        except Exception as exc:  # noqa: BLE001 - best-effort trajectory
+            print(f"# history append skipped: {exc}", flush=True)
         return self.path

@@ -1,0 +1,93 @@
+"""Append-only perf trajectory: BENCH_*.json runs -> BENCH_history.jsonl.
+
+Every ``BenchJSON.write()`` appends its full payload as one JSON line to
+``BENCH_history.jsonl`` (same output dir, override with
+``$REPRO_BENCH_HISTORY_PATH``, disable with ``$REPRO_BENCH_HISTORY=0``),
+keyed by the ``bench_provenance()`` git sha the payload already carries.
+One-shot BENCH snapshots answer "how fast is it now"; the history file
+is what answers "did PR N make the hot loop slower" — the bench gate
+(``scripts/bench_gate.py``) reads its tail as the rolling baseline.
+
+JSONL on purpose: append is atomic-enough under CI's one-writer-per-run
+model, partial trailing lines (a killed run) are skipped on load, and
+the file diffs/merges linearly across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+HISTORY_FILENAME = "BENCH_history.jsonl"
+
+
+def history_enabled() -> bool:
+    return os.environ.get("REPRO_BENCH_HISTORY", "1") not in ("0", "false", "")
+
+
+def history_path(out_dir: Optional[str] = None) -> str:
+    explicit = os.environ.get("REPRO_BENCH_HISTORY_PATH")
+    if explicit:
+        return explicit
+    if out_dir is None:
+        out_dir = os.environ.get("REPRO_BENCH_JSON_DIR", ".")
+    return os.path.join(out_dir, HISTORY_FILENAME)
+
+
+def append_run(payload: dict, source: str, path: Optional[str] = None) -> str:
+    """Append one BenchJSON payload as a history line. ``source`` is the
+    artifact filename (BENCH_kernels.json, ...) so one history file holds
+    every benchmark family. Returns the history path."""
+    path = history_path() if path is None else path
+    line = {"source": source, **payload}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "at") as fh:
+        fh.write(json.dumps(line, separators=(",", ":")) + "\n")
+    return path
+
+
+def load_history(path: Optional[str] = None,
+                 source: Optional[str] = None) -> List[dict]:
+    """All history lines, oldest first; malformed (truncated) lines are
+    skipped. ``source`` filters to one artifact family."""
+    path = history_path() if path is None else path
+    if not os.path.exists(path):
+        return []
+    runs: List[dict] = []
+    with open(path, "rt") as fh:
+        for raw in fh:
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                run = json.loads(raw)
+            except json.JSONDecodeError:
+                continue  # killed mid-append; the run never finished
+            if source is None or run.get("source") == source:
+                runs.append(run)
+    return runs
+
+
+def run_metrics(run: dict, fields: tuple = ("us_per_iter",)) -> Dict[str, float]:
+    """Flatten one history line (or live BenchJSON payload) into
+    ``{"<source>:<record name>:<field>": value}`` for the gated fields.
+    Non-numeric values are skipped."""
+    out: Dict[str, float] = {}
+    source = run.get("source", "")
+    for rec in run.get("records", ()):
+        for field in fields:
+            v = rec.get(field)
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[f"{source}:{rec.get('name', '?')}:{field}"] = float(v)
+    return out
+
+
+def metric_series(runs: List[dict],
+                  fields: tuple = ("us_per_iter",)) -> Dict[str, List[float]]:
+    """Per-metric value series across runs (oldest first) — the rolling
+    window the gate's min-of-k baseline is computed over."""
+    series: Dict[str, List[float]] = {}
+    for run in runs:
+        for key, v in run_metrics(run, fields).items():
+            series.setdefault(key, []).append(v)
+    return series

@@ -1,0 +1,210 @@
+"""CI perf-regression gate over the BENCH_history.jsonl trajectory.
+
+Compares the hot-loop metrics of the current BENCH_*.json artifacts
+against a rolling baseline built from prior ``BENCH_history.jsonl``
+lines (``benchmarks/history.py``), with noise-aware thresholds:
+
+  * baseline  = min over the last ``--window`` historical values
+    (min-of-k: the fastest the code has provably run — robust to the
+    one-sided noise of shared CI machines, where runs get slower, not
+    faster, by accident);
+  * band      = baseline * rel_tol  +  mad_mult * MAD(window)
+    (a relative floor plus a median-absolute-deviation term that widens
+    the band exactly when the trajectory itself is noisy).
+
+A metric regresses when ``current > baseline + band``. Gated metrics
+are the hot-loop rows: records carrying ``us_per_iter``
+(``hotloop/fused_k*`` and ``solver/fw_solve_*`` from kernels_bench,
+plus anything else that opts in by emitting the field). Whole-path
+``seconds`` rows ride the history for trend plots but are NOT gated —
+CI-scale end-to-end paths are compile-noise-dominated.
+
+With fewer than ``--min-runs`` historical runs for a metric the gate
+passes (warming up) — a fresh branch never fails on an empty baseline.
+
+Exit codes: 0 = pass, 1 = regression, 2 = usage/IO error.
+
+Usage (CI):
+  python scripts/bench_gate.py --current BENCH_kernels.json
+  python scripts/bench_gate.py --history BENCH_history.jsonl \
+      --current BENCH_kernels.json BENCH_table5.json --rel-tol 0.5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
+
+from benchmarks import history as bench_history  # noqa: E402
+
+GATE_FIELDS = ("us_per_iter",)
+
+
+def median(values: Sequence[float]) -> float:
+    vs = sorted(values)
+    n = len(vs)
+    if n == 0:
+        return float("nan")
+    mid = n // 2
+    return vs[mid] if n % 2 else 0.5 * (vs[mid - 1] + vs[mid])
+
+
+def mad(values: Sequence[float]) -> float:
+    """Median absolute deviation — the robust spread estimate the band
+    uses (one slow outlier run must not widen the gate forever)."""
+    m = median(values)
+    return median([abs(v - m) for v in values])
+
+
+@dataclass
+class GateResult:
+    metric: str
+    current: float
+    baseline: float  # NaN while warming up
+    band: float
+    n_history: int
+    regressed: bool
+    warming_up: bool
+
+    def describe(self) -> str:
+        if self.warming_up:
+            return (
+                f"WARMUP  {self.metric}: {self.current:.1f} "
+                f"({self.n_history} historical runs, gate needs more)"
+            )
+        verdict = "REGRESS" if self.regressed else "ok"
+        ratio = self.current / self.baseline if self.baseline else float("inf")
+        return (
+            f"{verdict:7s} {self.metric}: {self.current:.1f} vs "
+            f"baseline {self.baseline:.1f} (+band {self.band:.1f}, "
+            f"{ratio:.2f}x, n={self.n_history})"
+        )
+
+
+def check_metric(
+    metric: str,
+    current: float,
+    history_values: Sequence[float],
+    *,
+    min_runs: int = 3,
+    window: int = 10,
+    rel_tol: float = 0.5,
+    mad_mult: float = 5.0,
+) -> GateResult:
+    """Gate one metric against its history (pure — unit-testable with
+    synthetic trajectories)."""
+    if len(history_values) < min_runs:
+        return GateResult(
+            metric, current, float("nan"), float("nan"),
+            len(history_values), regressed=False, warming_up=True,
+        )
+    win = list(history_values[-window:])
+    baseline = min(win)
+    band = baseline * rel_tol + mad_mult * mad(win)
+    return GateResult(
+        metric, current, baseline, band, len(history_values),
+        regressed=current > baseline + band, warming_up=False,
+    )
+
+
+def check_run(
+    current_metrics: Dict[str, float],
+    history_series: Dict[str, List[float]],
+    **kw,
+) -> List[GateResult]:
+    """Gate every current hot-loop metric; metrics with no history at
+    all come back warming-up."""
+    return [
+        check_metric(metric, value, history_series.get(metric, []), **kw)
+        for metric, value in sorted(current_metrics.items())
+    ]
+
+
+def _drop_own_line(runs: List[dict], payload: dict, source: str) -> List[dict]:
+    """Remove the history line the current artifact itself appended
+    (BenchJSON.write appends BEFORE the gate runs — a run must not serve
+    as its own baseline). Exact-identity match on provenance + records,
+    newest first, at most one line — same-second sibling runs with
+    different numbers stay in the baseline."""
+    for i in range(len(runs) - 1, -1, -1):
+        run = runs[i]
+        if (
+            run.get("source") == source
+            and run.get("provenance") == payload.get("provenance")
+            and run.get("records") == payload.get("records")
+        ):
+            return runs[:i] + runs[i + 1:]
+    return runs
+
+
+def gate_files(
+    current_paths: Sequence[str],
+    history_file: Optional[str] = None,
+    **kw,
+) -> List[GateResult]:
+    """Load current BENCH_*.json artifacts + the history file, exclude
+    the current runs' own history lines, and gate."""
+    runs = bench_history.load_history(history_file)
+    current_metrics: Dict[str, float] = {}
+    for path in current_paths:
+        with open(path, "rt") as fh:
+            payload = json.load(fh)
+        source = os.path.basename(path)
+        runs = _drop_own_line(runs, payload, source)
+        current_metrics.update(
+            bench_history.run_metrics(
+                {"source": source, **payload}, GATE_FIELDS
+            )
+        )
+    series = bench_history.metric_series(runs, GATE_FIELDS)
+    return check_run(current_metrics, series, **kw)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", nargs="+", required=True,
+                    help="BENCH_*.json artifacts of the run under test")
+    ap.add_argument("--history", default=None,
+                    help="BENCH_history.jsonl (default: benchmarks/"
+                         "history.history_path())")
+    ap.add_argument("--min-runs", type=int, default=3)
+    ap.add_argument("--window", type=int, default=10)
+    ap.add_argument("--rel-tol", type=float, default=0.5,
+                    help="relative band floor over the min-of-window "
+                         "baseline (default 0.5 — CI CPU timing noise)")
+    ap.add_argument("--mad-mult", type=float, default=5.0,
+                    help="MAD multiplier added to the band")
+    args = ap.parse_args(argv)
+
+    for path in args.current:
+        if not os.path.exists(path):
+            print(f"bench_gate: missing artifact {path}", file=sys.stderr)
+            return 2
+    results = gate_files(
+        args.current, args.history, min_runs=args.min_runs,
+        window=args.window, rel_tol=args.rel_tol, mad_mult=args.mad_mult,
+    )
+    if not results:
+        print("bench_gate: no gated metrics in current artifacts "
+              f"(fields: {', '.join(GATE_FIELDS)})")
+        return 0
+    regressions = [r for r in results if r.regressed]
+    for r in results:
+        print(r.describe())
+    print(
+        f"bench_gate: {len(results)} metrics, "
+        f"{sum(r.warming_up for r in results)} warming up, "
+        f"{len(regressions)} regressions"
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

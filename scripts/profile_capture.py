@@ -1,0 +1,136 @@
+"""Programmatic profiler capture around one FW solve.
+
+Wraps a representative solve in a ``jax.profiler`` trace capture
+(TensorBoard/XProf format) AND the repo's own ``obs.trace.Tracer``
+(Chrome ``trace_event`` JSON), so a bench-gate regression comes with a
+profile artifact whose device timeline can be correlated with the
+solver's host-side span names: both captures bracket the same dispatch,
+and the Tracer spans (``profile/solve``, ``profile/solve/warmup``, ...)
+carry the wall-clock window to look at in the XProf trace.
+
+The capture is best-effort by design: ``jax.profiler`` needs a working
+``tensorflow``/``tensorboard_plugin_profile`` backend in some
+environments — when ``start_trace`` raises, the script still emits the
+Chrome trace + timing summary and says so, exit code 0 (a profile
+artifact must never fail CI by itself; the GATE fails CI, this explains
+the failure).
+
+Usage:
+  python scripts/profile_capture.py --out reports/profile
+  python scripts/profile_capture.py --backend sparse --fuse-steps 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO_ROOT, os.path.join(_REPO_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import engine  # noqa: E402
+from repro.core.fw_lasso import LASSO  # noqa: E402
+from repro.core.solver_config import FWConfig  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
+from repro.sparse.matrix import SparseBlockMatrix  # noqa: E402
+
+
+def build_problem(p: int, m: int, backend: str, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(p, m)).astype(np.float32)
+    coef = np.zeros(p, np.float32)
+    nz = rng.choice(p, size=max(1, p // 100), replace=False)
+    coef[nz] = rng.normal(size=nz.size).astype(np.float32)
+    y = X.T @ coef + 0.1 * rng.normal(size=m).astype(np.float32)
+    Xt = jnp.asarray(X)
+    if backend == "sparse":
+        X[np.abs(X) < 1.0] = 0.0  # ~32% density — keep the gather busy
+        Xt = SparseBlockMatrix.from_dense(X, block_size=128)
+    return Xt, jnp.asarray(y)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="reports/profile",
+                    help="artifact dir (XProf trace + chrome_trace.json)")
+    ap.add_argument("--backend", default="xla",
+                    choices=("xla", "pallas", "sparse"))
+    ap.add_argument("--step-rule", default="classic")
+    ap.add_argument("--fuse-steps", type=int, default=1)
+    ap.add_argument("--p", type=int, default=20_000)
+    ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--kappa", type=int, default=256)
+    ap.add_argument("--iters", type=int, default=300)
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    Xt, y = build_problem(args.p, args.m, args.backend, seed=0)
+    cfg = FWConfig(
+        delta=10.0, kappa=args.kappa, max_iters=args.iters, tol=0.0,
+        patience=10**9, backend=args.backend, step_rule=args.step_rule,
+        fuse_steps=args.fuse_steps,
+    )
+    key = jax.random.PRNGKey(0)
+
+    tracer = obs_trace.Tracer()
+    with obs_trace.use_tracer(tracer):
+        with tracer.span("profile/solve/warmup", cat="profile"):
+            engine.solve(LASSO, Xt, y, cfg, key).alpha.block_until_ready()
+
+        profiler_ok, profiler_err = True, None
+        try:
+            jax.profiler.start_trace(args.out)
+        except Exception as exc:  # noqa: BLE001 - backend-dependent
+            profiler_ok, profiler_err = False, str(exc)
+        t0 = time.perf_counter()
+        with tracer.span(
+            "profile/solve", cat="profile", backend=args.backend,
+            rule=args.step_rule, fuse_steps=args.fuse_steps,
+            p=args.p, m=args.m,
+        ):
+            res = engine.solve(LASSO, Xt, y, cfg, key)
+            res.alpha.block_until_ready()
+        elapsed = time.perf_counter() - t0
+        if profiler_ok:
+            try:
+                jax.profiler.stop_trace()
+            except Exception as exc:  # noqa: BLE001
+                profiler_ok, profiler_err = False, str(exc)
+
+    chrome_path = os.path.join(args.out, "chrome_trace.json")
+    tracer.save(chrome_path)
+    summary = {
+        "profiler_trace": args.out if profiler_ok else None,
+        "profiler_error": profiler_err,
+        "chrome_trace": chrome_path,
+        "span_table": tracer.span_table(),
+        "config": {
+            "backend": args.backend, "step_rule": args.step_rule,
+            "fuse_steps": args.fuse_steps, "p": args.p, "m": args.m,
+            "kappa": args.kappa, "iters": args.iters,
+        },
+        "solve_seconds": elapsed,
+        "us_per_iter": elapsed * 1e6 / max(1, int(res.iterations)),
+        "iterations": int(res.iterations),
+    }
+    summary_path = os.path.join(args.out, "profile_summary.json")
+    with open(summary_path, "wt") as fh:
+        json.dump(summary, fh, indent=2)
+    status = "captured" if profiler_ok else f"SKIPPED ({profiler_err})"
+    print(f"profile_capture: jax.profiler {status}")
+    print(f"profile_capture: chrome trace + summary in {args.out} "
+          f"({elapsed:.3f}s solve, "
+          f"{summary['us_per_iter']:.1f} us/iter)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

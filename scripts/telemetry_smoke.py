@@ -1,6 +1,6 @@
 """CI telemetry smoke (DESIGN.md §Observability).
 
-Three gates, in order:
+Five gates, in order:
 
   1. Artifact gate — run ``scripts/solver_report.py`` with a distributed
      (4 virtual CPU device) run included; it fails non-zero if the trace
@@ -13,6 +13,16 @@ Three gates, in order:
      vs ON (default ring, per-step objectives), min-of-N wall clock, and
      fail if telemetry-on exceeds the budget:
      $REPRO_TELEMETRY_OVERHEAD_PCT (default 10).
+  4. Exposition gate — run an instrumented solve with a metrics registry
+     installed, scrape the live ``/metrics`` HTTP endpoint, and fail
+     unless the OpenMetrics text passes ``validate_openmetrics`` and
+     contains the solve-latency histogram + quantile samples the serving
+     layer depends on (the written ``metrics.txt`` ships as an artifact).
+  5. Metrics-bridge overhead gate — same hotloop, registry installed vs
+     not (telemetry OFF both sides: this isolates the host-side shim),
+     same budget env var. The shim is one host timer + a handful of dict
+     updates per dispatch, so this also catches accidental per-iteration
+     work sneaking into the bridge.
 
 Usage: PYTHONPATH=src python scripts/telemetry_smoke.py --out-dir reports
 """
@@ -30,6 +40,9 @@ for _p in (_REPO_ROOT, os.path.join(_REPO_ROOT, "src")):
         sys.path.insert(0, _p)
 
 OVERHEAD_PCT = float(os.environ.get("REPRO_TELEMETRY_OVERHEAD_PCT", "10"))
+METRICS_OVERHEAD_PCT = float(
+    os.environ.get("REPRO_METRICS_OVERHEAD_PCT", str(OVERHEAD_PCT))
+)
 
 
 def overhead_gate(repeats: int = 5) -> float:
@@ -62,6 +75,127 @@ def overhead_gate(repeats: int = 5) -> float:
 
     t_off = best_of(FWConfig(**base))
     t_on = best_of(FWConfig(**base, telemetry=TelemetrySpec(capacity=256)))
+    return (t_on / t_off - 1.0) * 100.0
+
+
+def exposition_gate(out_dir: str) -> int:
+    """Scrape a live ``/metrics`` during instrumented solves; 0 on pass.
+
+    Installs a registry, runs a plain solve plus a short batched sparse
+    path (so lane-freeze counters populate), scrapes the HTTP endpoint,
+    validates the OpenMetrics text, and requires the families the
+    dashboards key on. The scraped text is written to
+    ``<out_dir>/metrics.txt`` and the JSON snapshot next to it.
+    """
+    import math
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import FWConfig, LASSO, engine, path as fw_path_mod
+    from repro.data import make_regression, standardize
+    from repro.obs import (
+        MetricsRegistry, MetricsServer, scrape, snapshot_json,
+        use_registry, validate_openmetrics,
+    )
+    from repro.sparse.matrix import SparseBlockMatrix
+
+    ds = standardize(
+        make_regression(m=128, p=512, n_informative=10, noise=0.5, seed=1)
+    )
+    Xt = jnp.asarray(np.asarray(ds.X.T, np.float32))
+    y = jnp.asarray(np.asarray(ds.y, np.float32))
+    Xs = np.asarray(ds.X.T, np.float32)
+    Xs[np.abs(Xs) < 1.0] = 0.0
+    Xt_sparse = SparseBlockMatrix.from_dense(jnp.asarray(Xs), block_size=128)
+    key = jax.random.PRNGKey(0)
+    cfg = FWConfig(delta=50.0, kappa=64, max_iters=120, tol=0.0,
+                   patience=10**9)
+
+    reg = MetricsRegistry()
+    with use_registry(reg):
+        engine.solve(LASSO, Xt, y, cfg, key)
+        fw_path_mod.fw_path_batched(
+            Xt_sparse, y, [2.0, 5.0, 10.0, 25.0],
+            FWConfig(delta=1.0, kappa=64, max_iters=200, tol=1e-4,
+                     backend="sparse"),
+            lane_width=4,
+        )
+        with MetricsServer(registry=reg, port=0) as srv:
+            text = scrape(srv.url)
+
+    problems = validate_openmetrics(text)
+    if problems:
+        print("FAIL: /metrics exposition invalid:", *problems, sep="\n  ")
+        return 1
+
+    snap = snapshot_json(reg)
+    fams = set(snap)
+    want = {"fw_solves", "fw_iterations", "fw_solve_latency_seconds",
+            "fw_lanes_admitted", "fw_lane_freezes"}
+    if not want <= fams:
+        print(f"FAIL: /metrics missing families: {sorted(want - fams)}")
+        return 1
+    lat = reg.get("fw_solve_latency_seconds")
+    quants = [lat.quantile(q, **dict(key))
+              for key, _snap in lat.series() for q in (0.5, 0.99)]
+    if not quants or any(math.isnan(v) for v in quants):
+        print("FAIL: solve-latency p50/p99 quantiles empty or NaN")
+        return 1
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "metrics.txt"), "w") as fh:
+        fh.write(text)
+    with open(os.path.join(out_dir, "metrics.json"), "w") as fh:
+        json.dump(snap, fh, indent=1, sort_keys=True)
+    print(f"# /metrics scrape valid: {len(fams)} families, "
+          f"p50/p99 solve latency populated")
+    return 0
+
+
+def bridge_overhead_gate(repeats: int = 5) -> float:
+    """Registry-installed vs bare hotloop wall clock; returns overhead %.
+
+    Telemetry stays OFF on both sides so this isolates the host-side
+    metrics shim (one perf_counter pair + a few dict updates per solve).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import FWConfig, LASSO, engine
+    from repro.data import make_regression, standardize
+    from repro.obs import MetricsRegistry, use_registry
+
+    ds = standardize(
+        make_regression(m=256, p=2048, n_informative=20, noise=0.5, seed=0)
+    )
+    Xt = jnp.asarray(np.asarray(ds.X.T, np.float32))
+    y = jnp.asarray(np.asarray(ds.y, np.float32))
+    key = jax.random.PRNGKey(0)
+    cfg = FWConfig(delta=100.0, kappa=128, sampling="uniform",
+                   max_iters=400, tol=0.0, patience=10**9)
+
+    def best_of(registry) -> float:
+        def run():
+            if registry is None:
+                engine.solve(LASSO, Xt, y, cfg, key).alpha.block_until_ready()
+            else:
+                with use_registry(registry):
+                    engine.solve(
+                        LASSO, Xt, y, cfg, key
+                    ).alpha.block_until_ready()
+        run()  # compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            run()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_off = best_of(None)
+    t_on = best_of(MetricsRegistry())
     return (t_on / t_off - 1.0) * 100.0
 
 
@@ -110,6 +244,19 @@ def main(argv=None) -> int:
           f"(budget {OVERHEAD_PCT:.0f}%)")
     if pct > OVERHEAD_PCT:
         print("FAIL: telemetry overhead exceeds budget")
+        return 1
+
+    # 4. OpenMetrics exposition over a live /metrics scrape
+    rc = exposition_gate(args.out_dir)
+    if rc != 0:
+        return rc
+
+    # 5. metrics-bridge overhead budget (registry on vs off)
+    pct = bridge_overhead_gate()
+    print(f"# metrics-bridge hotloop overhead: {pct:+.1f}% "
+          f"(budget {METRICS_OVERHEAD_PCT:.0f}%)")
+    if pct > METRICS_OVERHEAD_PCT:
+        print("FAIL: metrics-bridge overhead exceeds budget")
         return 1
     print("# telemetry smoke PASS")
     return 0

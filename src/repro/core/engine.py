@@ -67,13 +67,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import vertex
 from repro.core.solver_config import FWConfig
+from repro.obs import metrics as obs_metrics
 from repro.obs import telemetry as obs_telemetry
 from repro.kernels.colstats.colstats import colstats as _colstats_kernel
 from repro.sparse import ops as sparse_ops
@@ -799,3 +802,121 @@ def solve_batched(
     )
     res = batched_result(oracle, Xt_run, y, stats, final, patience, cfg, deltas)
     return res, saved
+
+
+# --------------------------------------------------------------------------
+# Metrics-plane host shims (DESIGN.md §Observability)
+# --------------------------------------------------------------------------
+
+
+def _observe_solve(reg, entry: str, cfg: FWConfig, res: SolveResult,
+                   elapsed_s: float) -> None:
+    """Fold one finished entry-point dispatch into the metrics registry.
+
+    Host-side only — runs AFTER the dispatch completes, never inside the
+    jitted program, so installing a registry changes zero compiled bytes.
+    Batched results count each lane individually in the totals; latency
+    is per DISPATCH (the quantity the path driver amortizes)."""
+    labels = dict(entry=entry, backend=cfg.backend, step_rule=cfg.step_rule)
+    names = ("entry", "backend", "step_rule")
+    iters = np.asarray(res.iterations, np.float64).reshape(-1)
+    lanes = iters.size
+    reg.counter(
+        "fw_solves",
+        "solver entry-point completions (batched lanes count individually)",
+        names,
+    ).inc(lanes, **labels)
+    reg.counter(
+        "fw_iterations", "FW iterations consumed across all solves", names
+    ).inc(float(iters.sum()), **labels)
+    reg.counter(
+        "fw_n_dots", "length-m dot products consumed (paper's cost unit)",
+        names,
+    ).inc(float(np.asarray(res.n_dots, np.float64).sum()), **labels)
+    n_conv = int(np.asarray(res.converged).reshape(-1).sum())
+    outcomes = reg.counter(
+        "fw_lane_outcomes",
+        "lane stop reason: §Stopping rule ('converged') vs max_iters",
+        names + ("outcome",),
+    )
+    if n_conv:
+        outcomes.inc(n_conv, outcome="converged", **labels)
+    if lanes - n_conv:
+        outcomes.inc(lanes - n_conv, outcome="max_iters", **labels)
+    reg.histogram(
+        "fw_solve_latency_seconds",
+        "wall time per entry-point dispatch, host-observed to completion",
+        names,
+    ).observe(elapsed_s, **labels)
+    eff = 1
+    if res.effective_fuse_steps is not None:
+        eff = int(np.asarray(res.effective_fuse_steps).reshape(-1)[0])
+    if cfg.fuse_steps > 1 and eff == 1:
+        reg.counter(
+            "fw_fused_fallback",
+            "dispatches where fuse_steps>1 fell back to per-step loops "
+            "(non-fusable oracle/sampling/rule)",
+            names,
+        ).inc(lanes, **labels)
+    elif eff > 1:
+        reg.counter(
+            "fw_fused_chunks",
+            "K-step fused chunks dispatched (lane-iterations / "
+            "effective_fuse_steps)",
+            names,
+        ).inc(float(np.ceil(iters / eff).sum()), **labels)
+    if res.gap is not None:
+        gaps = np.asarray(res.gap, np.float64).reshape(-1)
+        gaps = np.abs(gaps[np.isfinite(gaps)])
+        if gaps.size:
+            hist = reg.histogram(
+                "fw_certified_gap",
+                "certified FW duality gap at the returned iterate "
+                "(cfg.report_gap)",
+                names,
+                buckets=obs_metrics.GAP_BUCKETS,
+            )
+            for g in gaps:
+                hist.observe(float(g), **labels)
+
+
+class _MetricsEntry:
+    """Host shim over a jitted solver entry point.
+
+    With no registry installed (the default) this is a straight
+    pass-through — the compiled program and its dispatch path are
+    untouched, which is what keeps the metrics-off contract as strong as
+    the telemetry-off one. With a registry installed it times the
+    dispatch to completion (``block_until_ready`` — jit calls return
+    asynchronously) and folds totals/latency/gap into the registry.
+    jit attributes (``_cache_size``, ``clear_cache``, ``lower``, ...)
+    forward to the wrapped function, so cache bookkeeping like
+    ``path.batched_solver_cache_size`` keeps working."""
+
+    def __init__(self, fn, entry: str):
+        self._fn = fn
+        self._entry = entry
+        self.__name__ = entry
+        self.__doc__ = fn.__doc__
+        self.__wrapped__ = fn
+
+    def __call__(self, oracle, Xt, y, cfg, *args, **kwargs):
+        reg = obs_metrics.get_registry()
+        if reg is None:
+            return self._fn(oracle, Xt, y, cfg, *args, **kwargs)
+        t0 = time.perf_counter()
+        out = self._fn(oracle, Xt, y, cfg, *args, **kwargs)
+        # solve returns a bare SolveResult; the history/batched entries
+        # return (SolveResult, extra) — and SolveResult is itself a tuple
+        res = out if isinstance(out, SolveResult) else out[0]
+        jax.block_until_ready(res)
+        _observe_solve(reg, self._entry, cfg, res, time.perf_counter() - t0)
+        return out
+
+    def __getattr__(self, name):
+        return getattr(self._fn, name)
+
+
+solve = _MetricsEntry(solve, "solve")
+solve_with_history = _MetricsEntry(solve_with_history, "solve_with_history")
+solve_batched = _MetricsEntry(solve_batched, "solve_batched")

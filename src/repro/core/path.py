@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import baselines, engine, fw_lasso
 from repro.core.solver_config import CDConfig, FISTAConfig, FWConfig
+from repro.obs import metrics as obs_metrics
 from repro.obs import monitor as obs_monitor
 from repro.obs import trace as obs_trace
 from repro.sparse import ops as sparse_ops
@@ -101,6 +102,27 @@ def _point_gap(gap, lane=None) -> float:
     return float(gap if lane is None else gap[lane])
 
 
+def _observe_point(reg, driver: str, cfg: FWConfig, seconds: float) -> None:
+    """Per-grid-point latency into the metrics plane (no-op when the
+    registry is None — the metrics-off default)."""
+    if reg is None:
+        return
+    reg.histogram(
+        "fw_path_point_seconds",
+        "wall time per regularization-path grid point (batched lanes "
+        "amortize their chunk dispatch)",
+        ("driver", "backend"),
+    ).observe(seconds, driver=driver, backend=cfg.backend)
+
+
+def _finish_path(reg, tracer) -> None:
+    """End-of-path bridge: fold the tracer's spans/counters accumulated
+    during this path (incl. the distributed backend's trace-time
+    collective counters) into the registry."""
+    if reg is not None:
+        obs_metrics.tracer_to_registry(tracer, reg)
+
+
 def fw_path(
     Xt,
     y,
@@ -130,6 +152,7 @@ def fw_path(
     alpha = None
     points = []
     tracer = obs_trace.get_tracer()
+    reg = obs_metrics.get_registry()
     mon = obs_monitor.StepMonitor()
     t_total = time.perf_counter()
     total_dots = 0
@@ -154,6 +177,7 @@ def fw_path(
             if mon.end() and mon.step > 1:
                 tracer.instant("fw_path/straggler_point", cat="path",
                                point=mon.step, seconds=dt)
+            _observe_point(reg, "sequential", cfg, dt)
             alpha = res.alpha
             idx, val = _sparsify(alpha)
             points.append(
@@ -172,6 +196,7 @@ def fw_path(
             )
             total_dots += int(res.n_dots)
             total_iters += int(res.iterations)
+    _finish_path(reg, tracer)
     return PathResult(points, time.perf_counter() - t_total, total_dots, total_iters)
 
 
@@ -225,6 +250,7 @@ def fw_path_batched(
     carry = jnp.zeros((p,), Xt.dtype)  # densest solution seen so far
     points: List[Optional[PathPoint]] = [None] * n
     tracer = obs_trace.get_tracer()
+    reg = obs_metrics.get_registry()
     lanes_mon = obs_monitor.LaneProgressMonitor(max_iters=base_cfg.max_iters)
     t_total = time.perf_counter()
     total_dots = 0
@@ -257,10 +283,39 @@ def fw_path_batched(
             iters = np.asarray(res.iterations)
             chunk_saved = int(np.sum(iters.max() - iters[:real_lanes]))
             total_saved += chunk_saved
+            conv = np.asarray(res.converged)[:real_lanes]
             lanes_mon.end_chunk(
-                c, chunk[:real_lanes], iters[:real_lanes], chunk_saved,
-                np.asarray(res.converged)[:real_lanes],
+                c, chunk[:real_lanes], iters[:real_lanes], chunk_saved, conv
             )
+            if reg is not None:
+                lbl = dict(backend=base_cfg.backend)
+                reg.counter(
+                    "fw_lanes_admitted",
+                    "delta lanes admitted to batched path chunks",
+                    ("backend",),
+                ).inc(real_lanes, **lbl)
+                reg.counter(
+                    "fw_lane_freezes",
+                    "lanes frozen by per-lane early exit (converged before "
+                    "the chunk's while_loop drained)",
+                    ("backend",),
+                ).inc(int(conv.sum()), **lbl)
+                reg.counter(
+                    "fw_lane_saved_iterations",
+                    "lane-iterations pruned vs running every lane to the "
+                    "slowest lane's stop",
+                    ("backend",),
+                ).inc(chunk_saved, **lbl)
+                reg.histogram(
+                    "fw_path_chunk_seconds",
+                    "wall time per batched lane-chunk dispatch",
+                    ("backend",),
+                ).observe(dt, **lbl)
+                # one latency sample per REAL grid point (amortized over
+                # the chunk dispatch) — sample counts line up with the
+                # sequential driver's, so the two are comparable
+                for _ in range(real_lanes):
+                    _observe_point(reg, "batched", base_cfg, dt / real_lanes)
             for i in range(real_lanes):
                 g = c * lane_width + i
                 idx, val = _sparsify(alphas[i])
@@ -278,6 +333,7 @@ def fw_path_batched(
                 )
                 total_dots += int(res.n_dots[i])
                 total_iters += int(res.iterations[i])
+    _finish_path(reg, tracer)
     return PathResult(
         points,
         time.perf_counter() - t_total,

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from typing import Optional
 
@@ -33,6 +34,7 @@ from repro.core.engine import ColStats
 from repro.core.solver_config import FWConfig
 from repro.distributed import backend as dbackend
 from repro.distributed.shard import ShardedOperand
+from repro.obs import metrics as obs_metrics
 from repro.obs import telemetry as obs_telemetry
 from repro.obs import trace as obs_trace
 from repro.sparse.matrix import SparseBlockMatrix
@@ -189,6 +191,45 @@ def _alpha0_arr(op: ShardedOperand, alpha0):
     return jnp.asarray(alpha0, op.dtype)
 
 
+def _dispatch(entry: str, fresh: bool, dcfg: FWConfig, fn, args, **span_kw):
+    """Run one shard_map dispatch under its tracer span and — only when a
+    metrics registry is installed — time it to completion and fold
+    dispatch latency, program-freshness counters, per-lane solve totals,
+    and the tracer's trace-time collective counters into the registry.
+    Registry-off is a straight pass-through: no block_until_ready, no
+    extra host sync (same contract as ``engine._MetricsEntry``)."""
+    reg = obs_metrics.get_registry()
+    tracer = obs_trace.get_tracer()
+    t0 = time.perf_counter()
+    with tracer.span(f"dist/{entry}", cat="dist", new_program=fresh,
+                     **span_kw):
+        out = fn(*args)
+        if reg is not None:
+            jax.block_until_ready(out)
+    if reg is not None:
+        elapsed = time.perf_counter() - t0
+        # solve returns a bare SolveResult; history/batched return
+        # (SolveResult, extra) — and SolveResult is itself a tuple
+        res = out if isinstance(out, engine.SolveResult) else out[0]
+        reg.counter(
+            "fw_dist_dispatches",
+            "distributed shard_map dispatches by program freshness "
+            "('fresh' paid trace + XLA compile)",
+            ("entry", "program"),
+        ).inc(1, entry=entry, program="fresh" if fresh else "cached")
+        reg.histogram(
+            "fw_dist_dispatch_seconds",
+            "host wall time per distributed dispatch (compile included "
+            "when the program is fresh)",
+            ("entry",),
+        ).observe(elapsed, entry=entry)
+        engine._observe_solve(reg, f"dist/{entry}", dcfg, res, elapsed)
+        # per-collective trace-time counters (dist/collectives/*) and the
+        # dist span-duration histograms ride the incremental bridge
+        obs_metrics.tracer_to_registry(tracer, reg)
+    return out
+
+
 def solve(
     oracle,
     op: ShardedOperand,
@@ -205,10 +246,11 @@ def solve(
     fn, fresh = _traced_solver(op.mesh, oracle, dcfg, op.geom, "solve",
                                alpha0 is not None, None)
     delta = jnp.asarray(cfg.delta if delta is None else delta)
-    with obs_trace.get_tracer().span(
-        "dist/solve", cat="dist", new_program=fresh, layout=op.geom[0],
-    ):
-        return fn(*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0), delta)
+    return _dispatch(
+        "solve", fresh, dcfg, fn,
+        (*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0), delta),
+        layout=op.geom[0],
+    )
 
 
 def solve_with_history(
@@ -230,11 +272,11 @@ def solve_with_history(
     )
     fn, fresh = _traced_solver(op.mesh, oracle, hcfg, op.geom, "history",
                                alpha0 is not None, int(n_iters))
-    with obs_trace.get_tracer().span(
-        "dist/solve_with_history", cat="dist", new_program=fresh,
+    return _dispatch(
+        "solve_with_history", fresh, hcfg, fn,
+        (*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0)),
         n_iters=int(n_iters),
-    ):
-        return fn(*op.matrix_args, op.y, key, _alpha0_arr(op, alpha0))
+    )
 
 
 def solve_batched(
@@ -252,12 +294,12 @@ def solve_batched(
     dcfg = dist_config(cfg, op)
     fn, fresh = _traced_solver(op.mesh, oracle, dcfg, op.geom, "batched",
                                True, None)
-    with obs_trace.get_tracer().span(
-        "dist/solve_batched", cat="dist", new_program=fresh,
+    return _dispatch(
+        "solve_batched", fresh, dcfg, fn,
+        (*op.matrix_args, op.y, keys, jnp.asarray(alpha0s, op.dtype),
+         jnp.asarray(deltas)),
         lanes=int(jnp.asarray(deltas).shape[0]),
-    ):
-        return fn(*op.matrix_args, op.y, keys, jnp.asarray(alpha0s, op.dtype),
-                  jnp.asarray(deltas))
+    )
 
 
 def fw_path(

@@ -8,12 +8,36 @@ Three parts, all off the hot path by default:
     Chrome/Perfetto ``trace_event`` JSON plus an aggregate counter
     table;
   * ``obs.monitor`` / ``obs.report`` — EWMA straggler + lane-progress
-    monitoring (absorbed from ``runtime.monitor``) and markdown/JSON
-    run-report rendering (CLI: ``scripts/solver_report.py``).
+    monitoring and markdown/JSON run-report rendering (CLI:
+    ``scripts/solver_report.py``);
+  * ``obs.metrics`` / ``obs.export`` — the aggregated metrics plane:
+    a labeled Counter/Gauge/Histogram registry the raw primitives
+    bridge into, exposed as OpenMetrics text / JSON snapshots / a
+    background ``/metrics`` HTTP endpoint. OFF until a registry is
+    installed (``install_registry`` / ``use_registry``).
 
 NOTE: ``repro.core.solver_config`` imports ``obs.telemetry``, so this
 package must stay import-clean of ``repro.core``.
 """
+from repro.obs.export import (
+    MetricsServer,
+    render_openmetrics,
+    scrape,
+    snapshot_json,
+    validate_openmetrics,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    install_registry,
+    install_ring_sink,
+    ring_batch_to_registry,
+    tracer_to_registry,
+    use_registry,
+)
 from repro.obs.monitor import LaneProgressMonitor, StepMonitor
 from repro.obs.report import build_report, render_markdown, write_report
 from repro.obs.telemetry import (
@@ -39,9 +63,13 @@ from repro.obs.trace import (
 )
 
 __all__ = [
-    "EVENT_AWAY", "EVENT_DROP", "EVENT_FW", "EVENT_LAZY_HIT", "EVENT_NAMES",
-    "EVENT_PAIRWISE", "EVENT_PARTAN", "LaneProgressMonitor", "StepMonitor",
-    "Tracer", "TelemetryRing", "TelemetrySpec", "build_report", "get_tracer",
-    "register_sink", "render_markdown", "ring_to_records", "traced",
-    "unregister_sink", "use_tracer", "validate_chrome_trace", "write_report",
+    "Counter", "EVENT_AWAY", "EVENT_DROP", "EVENT_FW", "EVENT_LAZY_HIT",
+    "EVENT_NAMES", "EVENT_PAIRWISE", "EVENT_PARTAN", "Gauge", "Histogram",
+    "LaneProgressMonitor", "MetricsRegistry", "MetricsServer", "StepMonitor",
+    "Tracer", "TelemetryRing", "TelemetrySpec", "build_report", "get_registry",
+    "get_tracer", "install_registry", "install_ring_sink", "register_sink",
+    "render_markdown", "render_openmetrics", "ring_batch_to_registry",
+    "ring_to_records", "scrape", "snapshot_json", "tracer_to_registry",
+    "traced", "unregister_sink", "use_registry", "use_tracer",
+    "validate_chrome_trace", "validate_openmetrics", "write_report",
 ]

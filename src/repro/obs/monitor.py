@@ -1,9 +1,9 @@
 """EWMA step monitoring and path-driver lane progress (DESIGN.md
 §Observability).
 
-``StepMonitor`` is the straggler/heartbeat detector that used to live in
-``repro.runtime.monitor`` (that module is now a deprecation shim over
-this one): EWMA step-time tracking, straggler flagging when a step
+``StepMonitor`` is the straggler/heartbeat detector (absorbed from the
+former ``repro.runtime.monitor``, whose deprecation shim is now
+retired): EWMA step-time tracking, straggler flagging when a step
 exceeds ``straggler_factor`` x the EWMA, and a JSON heartbeat file a
 supervisor can watch. The clock is injectable so straggler logic is
 testable without sleeps.
@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, List, Optional
 
+from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 
@@ -55,6 +56,24 @@ class StepMonitor:
         self.ewma = dt if self.ewma == 0 else (
             self.ewma_alpha * dt + (1 - self.ewma_alpha) * self.ewma
         )
+        reg = obs_metrics.get_registry()
+        if reg is not None:
+            # metrics-plane bridge: monitored-step durations + straggler
+            # totals land in the registry alongside the tracer artifacts
+            reg.histogram(
+                "fw_monitor_step_seconds",
+                "durations of StepMonitor-wrapped units (path points, "
+                "lane chunks)",
+            ).observe(dt)
+            reg.gauge(
+                "fw_monitor_step_ewma_seconds",
+                "EWMA of monitored step durations (straggler baseline)",
+            ).set(self.ewma)
+            if is_straggler:
+                reg.counter(
+                    "fw_monitor_stragglers",
+                    "monitored steps exceeding straggler_factor x EWMA",
+                ).inc(1)
         if self.heartbeat_path is not None:
             self.heartbeat_path.write_text(
                 json.dumps(
@@ -112,6 +131,22 @@ class LaneProgressMonitor:
             lane_iters=iters, lane_saved=rec["lane_saved"],
             straggler=straggler,
         )
+        reg = obs_metrics.get_registry()
+        if reg is not None:
+            reg.counter(
+                "fw_monitor_lane_chunks", "batched-path lane chunks observed"
+            ).inc(1)
+            n_frozen = sum(1 for f in rec["freeze_at"] if f is not None)
+            if n_frozen:
+                reg.counter(
+                    "fw_monitor_frozen_lanes",
+                    "lanes that froze before their chunk's slowest lane",
+                ).inc(n_frozen)
+            if saved_iters:
+                reg.counter(
+                    "fw_monitor_saved_iterations",
+                    "lane-iterations pruned, as seen by the lane monitor",
+                ).inc(int(saved_iters))
         return rec
 
     def summary(self) -> dict:

@@ -19,10 +19,12 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Iterator, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.obs.trace import traced
 from repro.sparse.matrix import SparseBlockMatrix
 
@@ -311,16 +313,41 @@ def iter_shards_for_rows(
     if manifest is None:
         manifest = read_manifest(shard_dir)
     p = manifest["p"]
+    reg = obs_metrics.get_registry()
     for name in shards_for_rows(manifest, lo, hi):
-        with np.load(os.path.join(shard_dir, name)) as z:
+        path = os.path.join(shard_dir, name)
+        t0 = time.perf_counter()
+        with np.load(path) as z:
             off = int(z["row_offset"])
-            yield COOData(
+            chunk = COOData(
                 z["rows"].astype(np.int64) + off,
                 z["cols"].astype(np.int64),
                 z["vals"],
                 z["y"],
                 (manifest["m"], p),
-            ), off
+            )
+        if reg is not None:
+            # shard-read accounting: decompressed-in wall time + on-disk
+            # bytes per .npz open (the unit the out-of-core assembler and
+            # the per-mesh-cell loader both pay)
+            elapsed = time.perf_counter() - t0
+            n_bytes = os.path.getsize(path)
+            reg.counter(
+                "fw_shard_reads", "coo-npz-v1 shard files opened"
+            ).inc(1)
+            reg.counter(
+                "fw_shard_read_bytes", "on-disk bytes of shard files read"
+            ).inc(n_bytes)
+            reg.histogram(
+                "fw_shard_read_seconds",
+                "wall time per shard .npz open + array materialization",
+            ).observe(elapsed)
+            reg.histogram(
+                "fw_shard_file_bytes",
+                "on-disk size distribution of shard files read",
+                buckets=obs_metrics.BYTES_BUCKETS,
+            ).observe(float(n_bytes))
+        yield chunk, off
 
 
 @traced("sparse_io/load_shards", cat="io")

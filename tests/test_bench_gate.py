@@ -1,0 +1,196 @@
+"""Perf-regression observatory coverage (ISSUE 9 tentpole).
+
+The ISSUE's two gate acceptance criteria live here as unit tests:
+  * a synthetically injected 2x hot-loop slowdown MUST fail the gate;
+  * three consecutive re-runs drawn from realistic CI noise MUST all
+    pass (no false positives).
+Plus the plumbing around them: history append/load round-trips, the
+current run's own history line is excluded from its baseline (at most
+one line, exact identity), and fresh metrics warm up instead of failing.
+"""
+import json
+import sys
+import os
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import history as bench_history  # noqa: E402
+from scripts import bench_gate  # noqa: E402
+
+
+def _payload(us_per_iter, sha="abc1234", extra_record=None):
+    """Minimal kernels_bench-shaped BenchJSON payload."""
+    records = [
+        {"name": "hotloop/fused_k8_sparse", "us_per_iter": us_per_iter,
+         "seconds": us_per_iter * 400 / 1e6, "iters_per_sec": 1e6 / us_per_iter},
+    ]
+    if extra_record is not None:
+        records.append(extra_record)
+    return {
+        "provenance": {"git_sha": sha, "timestamp_utc": "2026-08-09T00:00:00Z",
+                       "scale": "ci"},
+        "records": records,
+    }
+
+
+class TestHistoryFile:
+    def test_append_load_roundtrip(self, tmp_path):
+        hp = str(tmp_path / "BENCH_history.jsonl")
+        for i, v in enumerate([100.0, 101.0, 99.0]):
+            bench_history.append_run(_payload(v, sha=f"sha{i}"),
+                                     "BENCH_kernels.json", path=hp)
+        runs = bench_history.load_history(hp)
+        assert len(runs) == 3
+        assert [r["provenance"]["git_sha"] for r in runs] == [
+            "sha0", "sha1", "sha2"
+        ]  # oldest first
+        series = bench_history.metric_series(runs)
+        key = "BENCH_kernels.json:hotloop/fused_k8_sparse:us_per_iter"
+        assert series[key] == [100.0, 101.0, 99.0]
+
+    def test_truncated_line_skipped(self, tmp_path):
+        hp = tmp_path / "BENCH_history.jsonl"
+        bench_history.append_run(_payload(100.0), "BENCH_kernels.json",
+                                 path=str(hp))
+        with open(hp, "at") as fh:
+            fh.write('{"source": "BENCH_kern')  # killed mid-append
+        assert len(bench_history.load_history(str(hp))) == 1
+
+    def test_source_filter(self, tmp_path):
+        hp = str(tmp_path / "h.jsonl")
+        bench_history.append_run(_payload(1.0), "BENCH_a.json", path=hp)
+        bench_history.append_run(_payload(2.0), "BENCH_b.json", path=hp)
+        assert len(bench_history.load_history(hp, source="BENCH_a.json")) == 1
+
+    def test_non_numeric_fields_skipped(self):
+        run = {"source": "s.json",
+               "records": [{"name": "r", "us_per_iter": "fast"},
+                           {"name": "q", "us_per_iter": True},
+                           {"name": "ok", "us_per_iter": 3}]}
+        assert bench_history.run_metrics(run) == {"s.json:ok:us_per_iter": 3.0}
+
+
+class TestCheckMetric:
+    def test_injected_2x_slowdown_caught(self):
+        """ISSUE 9 acceptance: a synthetic 2x hot-loop regression fails
+        the gate at the default thresholds."""
+        history = [100.0, 103.0, 98.0, 101.0, 99.0]
+        r = bench_gate.check_metric("hotloop", 2 * min(history), history)
+        assert r.regressed and not r.warming_up
+        assert "REGRESS" in r.describe()
+
+    def test_no_false_positive_on_noisy_reruns(self):
+        """ISSUE 9 acceptance: consecutive re-runs drawn from realistic
+        CI jitter (~±15% around the same code) all pass."""
+        history = [100.0, 112.0, 97.0, 104.0, 118.0, 101.0]
+        for rerun in (99.0, 115.0, 108.0):  # 3 consecutive re-runs
+            r = bench_gate.check_metric("hotloop", rerun, history)
+            assert not r.regressed, r.describe()
+            history = history + [rerun]  # each run lands in history
+
+    def test_warming_up_below_min_runs(self):
+        r = bench_gate.check_metric("m", 500.0, [100.0, 101.0], min_runs=3)
+        assert r.warming_up and not r.regressed
+        assert "WARMUP" in r.describe()
+
+    def test_min_of_window_baseline(self):
+        """Baseline is the min of the trailing window — old slow runs
+        outside the window don't inflate it, old FAST runs inside do
+        anchor it."""
+        history = [50.0] + [100.0] * 10  # the 50 has scrolled out (window=10)
+        r = bench_gate.check_metric("m", 140.0, history, window=10,
+                                    rel_tol=0.5, mad_mult=5.0)
+        assert r.baseline == 100.0
+        assert not r.regressed  # 140 < 100 + 50
+        r = bench_gate.check_metric("m", 160.0, history, window=10,
+                                    rel_tol=0.5, mad_mult=5.0)
+        assert r.regressed
+
+    def test_mad_widens_band_for_noisy_series(self):
+        quiet = [100.0, 100.0, 100.0, 100.0]
+        noisy = [100.0, 130.0, 100.0, 130.0]
+        r_q = bench_gate.check_metric("m", 152.0, quiet)
+        r_n = bench_gate.check_metric("m", 152.0, noisy)
+        assert r_q.regressed  # quiet trajectory: tight band, 1.52x fails
+        assert not r_n.regressed  # MAD term absorbs the same ratio
+
+    def test_check_run_covers_new_metrics(self):
+        results = bench_gate.check_run(
+            {"a": 100.0, "brand_new": 1.0}, {"a": [90.0, 91.0, 92.0]}
+        )
+        by_name = {r.metric: r for r in results}
+        assert not by_name["a"].regressed
+        assert by_name["brand_new"].warming_up
+
+
+class TestGateFiles:
+    def _write_current(self, tmp_path, payload, name="BENCH_kernels.json"):
+        p = tmp_path / name
+        p.write_text(json.dumps(payload))
+        return str(p)
+
+    def test_end_to_end_regression_exit_code(self, tmp_path):
+        hp = str(tmp_path / "h.jsonl")
+        for i in range(4):
+            bench_history.append_run(_payload(100.0 + i, sha=f"s{i}"),
+                                     "BENCH_kernels.json", path=hp)
+        slow = _payload(206.0, sha="s-slow")
+        bench_history.append_run(slow, "BENCH_kernels.json", path=hp)
+        cur = self._write_current(tmp_path, slow)
+        assert bench_gate.main(["--current", cur, "--history", hp]) == 1
+        fast = _payload(103.0, sha="s-ok")
+        bench_history.append_run(fast, "BENCH_kernels.json", path=hp)
+        cur = self._write_current(tmp_path, fast)
+        assert bench_gate.main(["--current", cur, "--history", hp]) == 0
+
+    def test_own_line_excluded_from_baseline(self, tmp_path):
+        """BenchJSON.write appends before the gate runs — the gate must
+        not let a regressed run vouch for itself, and with ONLY its own
+        line the metric warms up rather than passing on a fake baseline."""
+        hp = str(tmp_path / "h.jsonl")
+        mine = _payload(206.0, sha="me")
+        bench_history.append_run(mine, "BENCH_kernels.json", path=hp)
+        results = bench_gate.gate_files(
+            [self._write_current(tmp_path, mine)], hp
+        )
+        assert all(r.warming_up for r in results)  # own line dropped
+
+    def test_drop_own_line_exact_and_single(self):
+        mine = {"source": "BENCH_kernels.json", **_payload(100.0, sha="x")}
+        sibling = {"source": "BENCH_kernels.json", **_payload(101.0, sha="x")}
+        twin = json.loads(json.dumps(mine))
+        runs = [sibling, twin, json.loads(json.dumps(mine))]
+        kept = bench_gate._drop_own_line(runs, _payload(100.0, sha="x"),
+                                         "BENCH_kernels.json")
+        # exactly one identical line dropped (newest), sibling + twin stay
+        assert len(kept) == 2
+        assert kept[0] is sibling
+        other = bench_gate._drop_own_line(runs, _payload(999.0, sha="x"),
+                                          "BENCH_kernels.json")
+        assert len(other) == 3  # no identity match -> nothing dropped
+
+    def test_missing_artifact_is_usage_error(self, tmp_path):
+        assert bench_gate.main(
+            ["--current", str(tmp_path / "nope.json")]
+        ) == 2
+
+    def test_seconds_only_records_not_gated(self, tmp_path):
+        """table5_fw rows carry seconds but no us_per_iter — they ride
+        the history for trends but must not produce gate results."""
+        hp = str(tmp_path / "h.jsonl")
+        payload = {
+            "provenance": {"git_sha": "t", "scale": "ci"},
+            "records": [{"name": "table5/path", "seconds": 12.0,
+                         "iters": 4000, "dots": 1e6}],
+        }
+        cur = self._write_current(tmp_path, payload, "BENCH_table5.json")
+        assert bench_gate.gate_files([cur], hp) == []
+        assert bench_gate.main(["--current", cur, "--history", hp]) == 0
+
+    def test_median_and_mad(self):
+        assert bench_gate.median([3.0, 1.0, 2.0]) == 2.0
+        assert bench_gate.median([1.0, 2.0, 3.0, 4.0]) == 2.5
+        assert bench_gate.mad([1.0, 1.0, 1.0]) == 0.0
+        assert bench_gate.mad([1.0, 2.0, 9.0]) == 1.0

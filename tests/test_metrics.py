@@ -1,0 +1,393 @@
+"""Metrics plane coverage (ISSUE 9 tentpole).
+
+Four layers:
+  * primitives: Counter/Gauge/Histogram semantics — monotonicity, label
+    validation, fixed-bucket invariants, interpolated quantiles;
+  * registry: get-or-create families, kind/label/bucket conflict
+    detection, install plumbing (OFF by default, scoped installs);
+  * export: OpenMetrics text round-trips through the exposition checker
+    (including rejection cases), JSON snapshots, the live ``/metrics``
+    HTTP endpoint;
+  * solver bridges: registry-off dispatch is bitwise identical to
+    registry-on (the metrics-off contract), instrumented solves populate
+    the solve/latency/gap families, ring flushes and tracer spans fold in
+    exactly once, and a batched SPARSE path scraped mid-registry carries
+    non-NaN p50/p99 solve latency plus lane-freeze counters — the
+    acceptance scrape.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import FWConfig, engine
+from repro.core import path as path_lib
+from repro.core.fw_lasso import LASSO
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    MetricsServer,
+    TelemetrySpec,
+    Tracer,
+    get_registry,
+    install_registry,
+    install_ring_sink,
+    render_openmetrics,
+    ring_batch_to_registry,
+    scrape,
+    snapshot_json,
+    tracer_to_registry,
+    unregister_sink,
+    use_registry,
+    validate_openmetrics,
+)
+from repro.obs.metrics import GAP_BUCKETS
+from repro.sparse.matrix import SparseBlockMatrix
+
+DELTA = 150.0
+
+
+def _base_cfg(**kw):
+    base = dict(delta=DELTA, kappa=40, sampling="uniform", max_iters=120,
+                tol=0.0, patience=10**9)
+    base.update(kw)
+    return FWConfig(**base)
+
+
+def _sparse_mat(Xt, threshold=0.7, block_size=64):
+    Xs = np.asarray(Xt).copy()
+    Xs[np.abs(Xs) < threshold] = 0.0
+    return SparseBlockMatrix.from_dense(Xs, block_size=block_size)
+
+
+class TestPrimitives:
+    def test_counter_monotone(self):
+        c = Counter("c", "help")
+        c.inc()
+        c.inc(2.5)
+        assert c.value() == 3.5
+        with pytest.raises(ValueError):
+            c.inc(-1.0)
+
+    def test_counter_labels(self):
+        c = Counter("c", "help", ("backend",))
+        c.inc(1, backend="xla")
+        c.inc(2, backend="sparse")
+        assert c.value(backend="xla") == 1
+        assert c.value(backend="sparse") == 2
+        assert [dict(k)["backend"] for k, _ in c.series()] == ["sparse", "xla"]
+        with pytest.raises(ValueError):
+            c.inc(1)  # missing label
+        with pytest.raises(ValueError):
+            c.inc(1, backend="xla", extra="nope")
+
+    def test_gauge_set_add(self):
+        g = Gauge("g", "help")
+        g.set(4.0)
+        g.set(2.0)  # last write wins
+        assert g.value() == 2.0
+        g.add(0.5)
+        assert g.value() == 2.5
+
+    def test_histogram_buckets_and_quantiles(self):
+        h = Histogram("h", "help", buckets=(1.0, 2.0, 4.0))
+        for v in (0.5, 1.5, 1.5, 3.0, 100.0):
+            h.observe(v)
+        snap = h.snapshot()
+        assert snap["count"] == 5
+        assert snap["sum"] == pytest.approx(106.5)
+        # cumulative per le bound, +Inf implicit
+        assert snap["buckets"] == [(1.0, 1), (2.0, 3), (4.0, 4),
+                                   (math.inf, 5)]
+        # p50: target 2.5 falls in (1, 2], interpolated 3/4 through it
+        assert h.quantile(0.5) == pytest.approx(1.75)
+        # quantile landing in +Inf clamps to the top finite bound
+        assert h.quantile(0.99) == 4.0
+
+    def test_histogram_empty_is_nan(self):
+        h = Histogram("h", "help", buckets=(1.0,))
+        assert math.isnan(h.quantile(0.5))
+        assert h.snapshot() is None
+
+    def test_histogram_bucket_validation(self):
+        with pytest.raises(ValueError):
+            Histogram("h", "help", buckets=())
+        with pytest.raises(ValueError):
+            Histogram("h", "help", buckets=(2.0, 1.0))
+        with pytest.raises(ValueError):
+            Histogram("h", "help", buckets=(1.0, 1.0))
+        # a trailing +Inf is legal but implicit
+        h = Histogram("h", "help", buckets=(1.0, math.inf))
+        assert h.buckets == (1.0,)
+
+    def test_exact_bucket_boundary_counts_le(self):
+        h = Histogram("h", "help", buckets=(1.0, 2.0))
+        h.observe(1.0)
+        assert h.snapshot()["buckets"][0] == (1.0, 1)  # le is inclusive
+
+
+class TestRegistry:
+    def test_get_or_create_returns_same_family(self):
+        reg = MetricsRegistry()
+        a = reg.counter("fw_x", "first", ("l",))
+        b = reg.counter("fw_x", "redeclared-help-ignored", ("l",))
+        assert a is b
+
+    def test_kind_and_label_conflicts_raise(self):
+        reg = MetricsRegistry()
+        reg.counter("fw_x", "", ("l",))
+        with pytest.raises(ValueError):
+            reg.gauge("fw_x", "")
+        with pytest.raises(ValueError):
+            reg.counter("fw_x", "", ("other",))
+
+    def test_bucket_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.histogram("fw_h", "", buckets=(1.0, 2.0))
+        with pytest.raises(ValueError):
+            reg.histogram("fw_h", "", buckets=(1.0, 3.0))
+        # re-declaring identical buckets is fine
+        assert reg.histogram("fw_h", "", buckets=(1.0, 2.0)) is reg.get("fw_h")
+
+    def test_collect_sorted(self):
+        reg = MetricsRegistry()
+        reg.counter("fw_b", "")
+        reg.counter("fw_a", "")
+        assert [m.name for m in reg.collect()] == ["fw_a", "fw_b"]
+
+    def test_off_by_default_and_scoped_install(self):
+        assert get_registry() is None
+        reg = MetricsRegistry()
+        with use_registry(reg):
+            assert get_registry() is reg
+            inner = MetricsRegistry()
+            with use_registry(inner):
+                assert get_registry() is inner
+            assert get_registry() is reg
+        assert get_registry() is None
+
+    def test_process_install_uninstall(self):
+        reg = MetricsRegistry()
+        prev = install_registry(reg)
+        try:
+            assert prev is None
+            assert get_registry() is reg
+        finally:
+            install_registry(None)
+        assert get_registry() is None
+
+
+class TestExport:
+    def _populated(self):
+        reg = MetricsRegistry()
+        reg.counter("fw_things", "things seen", ("kind",)).inc(3, kind="a")
+        reg.gauge("fw_depth", "queue depth").set(2.0)
+        h = reg.histogram("fw_lat_seconds", "latency", buckets=(0.1, 1.0))
+        h.observe(0.05)
+        h.observe(0.5)
+        h.observe(5.0)
+        return reg
+
+    def test_render_validates_clean(self):
+        text = render_openmetrics(self._populated())
+        assert validate_openmetrics(text) == []
+        assert text.endswith("# EOF\n")
+        assert 'fw_things_total{kind="a"} 3' in text
+        assert 'fw_lat_seconds_bucket{le="+Inf"} 3' in text
+        assert 'quantile="0.5"' in text
+
+    def test_validator_rejects_bad_exposition(self):
+        assert validate_openmetrics("")  # no EOF
+        assert validate_openmetrics("junk line !!\n# EOF\n")
+        # counter sample without the _total suffix
+        bad = ("# TYPE fw_c counter\nfw_c 1\n# EOF\n")
+        assert any("_total" in p for p in validate_openmetrics(bad))
+        # histogram with non-cumulative buckets
+        bad = (
+            "# TYPE fw_h histogram\n"
+            'fw_h_bucket{le="1.0"} 5\n'
+            'fw_h_bucket{le="+Inf"} 3\n'
+            "fw_h_sum 1\nfw_h_count 3\n# EOF\n"
+        )
+        assert validate_openmetrics(bad)
+
+    def test_snapshot_json(self):
+        snap = snapshot_json(self._populated())
+        assert set(snap) == {"fw_things", "fw_depth", "fw_lat_seconds"}
+        lat = snap["fw_lat_seconds"]
+        assert lat["kind"] == "histogram"
+        (series,) = lat["series"]
+        assert series["count"] == 3
+        assert series["bucket_counts"] == [1, 2, 3]  # cumulative, le-ordered
+        assert set(series["quantiles"]) == {"0.5", "0.95", "0.99"}
+        assert json.dumps(snap)  # JSON-serializable end to end
+
+    def test_http_endpoint_scrape(self):
+        reg = self._populated()
+        with MetricsServer(registry=reg, port=0) as srv:
+            text = scrape(srv.url)
+            assert validate_openmetrics(text) == []
+            assert "fw_things_total" in text
+            js = json.loads(scrape(srv.url + ".json"))
+        assert "fw_lat_seconds" in js
+
+    def test_server_follows_live_registry(self):
+        """Constructed with registry=None the server serves whatever is
+        installed at scrape time — the long-running-process shape."""
+        with MetricsServer(port=0) as srv:
+            reg = MetricsRegistry()
+            reg.counter("fw_live", "").inc(7)
+            with use_registry(reg):
+                assert "fw_live_total 7" in scrape(srv.url)
+            # registry popped -> empty (but valid) exposition
+            assert validate_openmetrics(scrape(srv.url)) == []
+
+
+class TestSolverBridges:
+    def test_registry_on_is_bitwise_identical(self, small_problem, rng_key):
+        """The metrics shim must never touch the trajectory: alpha,
+        iterations, and dot counts agree bit for bit with the registry
+        installed vs not (same contract as telemetry-off)."""
+        Xt, y, _ = small_problem
+        cfg = _base_cfg()
+        off = engine.solve(LASSO, Xt, y, cfg, rng_key)
+        with use_registry(MetricsRegistry()):
+            on = engine.solve(LASSO, Xt, y, cfg, rng_key)
+        np.testing.assert_array_equal(np.asarray(off.alpha), np.asarray(on.alpha))
+        assert int(off.iterations) == int(on.iterations)
+        assert int(off.n_dots) == int(on.n_dots)
+
+    def test_solve_families_populated(self, small_problem, rng_key):
+        Xt, y, _ = small_problem
+        reg = MetricsRegistry()
+        with use_registry(reg):
+            res = engine.solve(LASSO, Xt, y, _base_cfg(report_gap=True),
+                               rng_key)
+        lbl = dict(entry="solve", backend="xla", step_rule="classic")
+        assert reg.get("fw_solves").value(**lbl) == 1
+        assert reg.get("fw_iterations").value(**lbl) == int(res.iterations)
+        assert reg.get("fw_n_dots").value(**lbl) == int(res.n_dots)
+        lat = reg.get("fw_solve_latency_seconds")
+        assert lat.snapshot(**lbl)["count"] == 1
+        assert not math.isnan(lat.quantile(0.5, **lbl))
+        gap = reg.get("fw_certified_gap")
+        assert gap.buckets == GAP_BUCKETS
+        assert gap.snapshot(**lbl)["count"] == 1
+
+    def test_no_registry_records_nothing(self, small_problem, rng_key):
+        """OFF state: entry points pass straight through (nothing to
+        observe, no registry to fill)."""
+        Xt, y, _ = small_problem
+        engine.solve(LASSO, Xt, y, _base_cfg(), rng_key)
+        assert get_registry() is None
+
+    def test_jit_attribute_forwarding(self):
+        """The shim forwards jit bookkeeping — the path driver's cache
+        accounting reads through it."""
+        assert isinstance(engine.solve_batched._cache_size(), int)
+        assert engine.solve.__name__ == "solve"
+
+    def test_ring_batch_bridge(self):
+        reg = MetricsRegistry()
+        batch = {
+            "k": np.arange(6),
+            "event": np.asarray([0, 0, 1, 2, 0, 5]),
+            "gap": np.asarray([1.0, 0.5, np.nan, -1.0, 10.0, 2.0]),
+        }
+        ring_batch_to_registry(batch, reg, backend="xla")
+        assert reg.get("fw_ring_iterations_total").value(backend="xla") == 6
+        ev = reg.get("fw_step_events_total")
+        assert ev.value(backend="xla", event="fw") == 3
+        assert ev.value(backend="xla", event="away") == 1
+        assert ev.value(backend="xla", event="partan") == 1
+        # only finite positive gaps land in the histogram
+        assert reg.get("fw_sampled_gap").snapshot(backend="xla")["count"] == 4
+
+    def test_ring_sink_streams_into_registry(self, small_problem, rng_key):
+        """TelemetrySpec(stream_to=install_ring_sink()) folds every ring
+        flush into the live registry: iteration totals match the solve."""
+        Xt, y, _ = small_problem
+        reg = MetricsRegistry()
+        name = install_ring_sink()
+        try:
+            with use_registry(reg):
+                res = engine.solve(
+                    LASSO, Xt, y,
+                    _base_cfg(max_iters=50,
+                              telemetry=TelemetrySpec(capacity=16,
+                                                      stream_to=name)),
+                    rng_key,
+                )
+                res.alpha.block_until_ready()
+                jax.effects_barrier()
+        finally:
+            unregister_sink(name)
+        assert reg.get("fw_ring_iterations_total").value() == 50
+        assert reg.get("fw_step_events_total").value(event="fw") == 50
+
+    def test_tracer_bridge_is_incremental(self):
+        tr = Tracer("t")
+        reg = MetricsRegistry()
+        with tr.span("load"):
+            pass
+        tr.counter("widgets", 2)
+        tracer_to_registry(tr, reg)
+        tracer_to_registry(tr, reg)  # idempotent on the same events
+        assert reg.get("fw_span_seconds").snapshot(span="load")["count"] == 1
+        assert reg.get("fw_trace_counter").value(counter="widgets") == 2
+        with tr.span("load"):
+            pass
+        tr.counter("widgets", 3)
+        tracer_to_registry(tr, reg)  # only the delta lands
+        assert reg.get("fw_span_seconds").snapshot(span="load")["count"] == 2
+        assert reg.get("fw_trace_counter").value(counter="widgets") == 5
+
+
+class TestAcceptanceScrape:
+    def test_batched_sparse_path_scrape(self, small_problem):
+        """ISSUE 9 acceptance: scrape a live ``/metrics`` during a
+        batched sparse path solve; the exposition must validate and carry
+        non-empty p50/p99 solve-latency quantiles + lane-freeze
+        counters."""
+        Xt, y, _ = small_problem
+        mat = _sparse_mat(Xt)
+        cfg = FWConfig(delta=1.0, kappa=40, sampling="uniform",
+                       max_iters=300, tol=1e-4, patience=20,
+                       backend="sparse")
+        reg = MetricsRegistry()
+        with use_registry(reg), MetricsServer(registry=reg, port=0) as srv:
+            path_lib.fw_path_batched(
+                mat, y, [5.0, 20.0, 60.0, DELTA], cfg, lane_width=4
+            )
+            text = scrape(srv.url)
+        assert validate_openmetrics(text) == []
+        assert "fw_lane_freezes_total" in text
+        assert reg.get("fw_lanes_admitted").value(backend="sparse") == 4
+        assert reg.get("fw_lane_freezes").value(backend="sparse") >= 1
+        lat = reg.get("fw_solve_latency_seconds")
+        lbl = dict(entry="solve_batched", backend="sparse",
+                   step_rule="classic")
+        for q in (0.5, 0.99):
+            assert not math.isnan(lat.quantile(q, **lbl))
+        # the per-point histogram saw all four path points
+        pts = reg.get("fw_path_point_seconds")
+        snap = pts.snapshot(driver="batched", backend="sparse")
+        assert snap["count"] == 4
+
+    def test_sequential_path_points_observed(self, small_problem):
+        Xt, y, _ = small_problem
+        cfg = _base_cfg(max_iters=60)
+        reg = MetricsRegistry()
+        with use_registry(reg):
+            path_lib.fw_path(Xt, y, [20.0, DELTA], cfg)
+        snap = reg.get("fw_path_point_seconds").snapshot(
+            driver="sequential", backend="xla"
+        )
+        assert snap["count"] == 2
+        # the path tracer's spans were folded in on completion
+        assert reg.get("fw_span_seconds") is not None

@@ -305,6 +305,139 @@ class TestStreaming:
         assert int(res.telemetry.cursor) == 20
 
 
+class TestStreamingWrapAndFreeze:
+    """ISSUE 9 satellite: wrapped-ring ``stream_to`` flush cadence and
+    the ring invariants the batched driver's lane freezing must keep."""
+
+    def _stream(self, Xt, y, key, cfg):
+        batches = []
+        register_sink("wrap-test", batches.append)
+        try:
+            res = engine.solve(LASSO, Xt, y, cfg, key)
+            res.alpha.block_until_ready()
+            jax.effects_barrier()
+        finally:
+            unregister_sink("wrap-test")
+        return res, batches
+
+    def test_wrap_boundary_batches_are_full_rings(self, small_problem,
+                                                  rng_key):
+        """Non-final flushes fire exactly at wrap boundaries, so every
+        one delivers a full ring; the leftover drains in one partial
+        final flush."""
+        Xt, y, _ = small_problem
+        _, batches = self._stream(
+            Xt, y, rng_key,
+            _base_cfg(max_iters=50,
+                      telemetry=TelemetrySpec(capacity=16,
+                                              stream_to="wrap-test")),
+        )
+        assert [len(b["record_index"]) for b in batches] == [16, 16, 16, 2]
+        idx = np.concatenate([b["record_index"] for b in batches])
+        np.testing.assert_array_equal(idx, np.arange(50))  # in order, no gaps
+
+    def test_exact_multiple_skips_empty_final_flush(self, small_problem,
+                                                    rng_key):
+        """iterations % capacity == 0: the last wrap flush already
+        drained everything and the final flush must not deliver an empty
+        batch."""
+        Xt, y, _ = small_problem
+        _, batches = self._stream(
+            Xt, y, rng_key,
+            _base_cfg(max_iters=32,
+                      telemetry=TelemetrySpec(capacity=16,
+                                              stream_to="wrap-test")),
+        )
+        assert [len(b["record_index"]) for b in batches] == [16, 16]
+
+    def test_partial_final_flush_on_early_stop(self, small_problem, rng_key):
+        """A patience stop mid-ring drains exactly the recorded
+        remainder: streamed records == cursor == iterations."""
+        Xt, y, _ = small_problem
+        res, batches = self._stream(
+            Xt, y, rng_key,
+            _base_cfg(delta=20.0, tol=1e-3, patience=10, max_iters=400,
+                      telemetry=TelemetrySpec(capacity=64,
+                                              stream_to="wrap-test")),
+        )
+        it = int(res.iterations)
+        assert it < 400  # the stop actually fired early
+        assert int(res.telemetry.cursor) == it
+        assert int(res.telemetry.flushed) == it
+        idx = np.concatenate([b["record_index"] for b in batches])
+        np.testing.assert_array_equal(idx, np.arange(it))
+        assert len(batches[-1]["record_index"]) == it % 64 or it % 64 == 0
+
+    def _batched(self, Xt, y, capacity, **cfg_kw):
+        base = dict(delta=1.0, kappa=40, sampling="uniform", max_iters=400,
+                    tol=1e-3, patience=10,
+                    telemetry=TelemetrySpec(capacity=capacity))
+        base.update(cfg_kw)
+        cfg = FWConfig(**base)
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        deltas = jnp.asarray([20.0, 80.0, 150.0], Xt.dtype)
+        alpha0s = jnp.zeros((3, Xt.shape[0]), Xt.dtype)
+        return engine.solve_batched(LASSO, Xt, y, cfg, keys, alpha0s, deltas)
+
+    def test_frozen_lane_rings_stop_recording(self, small_problem):
+        """capacity > iterations: each lane's ring holds exactly its own
+        iterations — frozen lanes write nothing while the slowest lane
+        keeps going, and the slots past a lane's freeze stay empty."""
+        Xt, y, _ = small_problem
+        res, _ = self._batched(Xt, y, capacity=400)
+        iters = np.asarray(res.iterations)
+        assert len(set(iters.tolist())) > 1  # lanes genuinely froze apart
+        for lane in range(3):
+            ring = jax.tree_util.tree_map(lambda a: a[lane], res.telemetry)
+            it = int(iters[lane])
+            assert int(ring.cursor) == it
+            rec = ring_to_records(ring)
+            np.testing.assert_array_equal(rec["k"], np.arange(it))
+            assert np.all(np.asarray(ring.k)[it:] == -1)  # untouched slots
+
+    def test_frozen_lane_wrapped_rings_keep_tail(self, small_problem):
+        """capacity < iterations: a wrapped lane ring still reports the
+        true per-lane count through ``cursor`` and surfaces the LAST
+        ``capacity`` records of that lane — not the slowest lane's."""
+        Xt, y, _ = small_problem
+        res, _ = self._batched(Xt, y, capacity=32)
+        iters = np.asarray(res.iterations)
+        for lane in range(3):
+            ring = jax.tree_util.tree_map(lambda a: a[lane], res.telemetry)
+            it = int(iters[lane])
+            assert int(ring.cursor) == it
+            rec = ring_to_records(ring)
+            n = min(it, 32)
+            np.testing.assert_array_equal(rec["k"], np.arange(it - n, it))
+            np.testing.assert_array_equal(
+                rec["record_index"], np.arange(it - n, it)
+            )
+            assert np.all(np.diff(rec["n_dots"]) > 0)
+
+    def test_fused_chunks_freeze_mid_chunk_exact_cursor(self, small_problem):
+        """fuse_steps=K batched lanes stop on their own iteration, not a
+        chunk boundary: in-chunk masking must keep cursor == iterations
+        even when the freeze lands mid-chunk."""
+        Xt, y, _ = small_problem
+        mat = _sparse_mat(Xt)
+        res, _ = self._batched(
+            mat, y, capacity=64,
+            backend="sparse", sparse_kernel=True, interpret=True,
+            fuse_steps=8,
+            telemetry=TelemetrySpec(capacity=64, record_objective=False),
+        )
+        iters = np.asarray(res.iterations)
+        np.testing.assert_array_equal(
+            np.asarray(res.telemetry.cursor), iters
+        )
+        for lane in range(3):
+            ring = jax.tree_util.tree_map(lambda a: a[lane], res.telemetry)
+            rec = ring_to_records(ring)
+            it = int(iters[lane])
+            n = min(it, 64)
+            np.testing.assert_array_equal(rec["k"], np.arange(it - n, it))
+
+
 class TestTracer:
     def test_spans_counters_and_validation(self):
         tr = Tracer("t")
@@ -418,12 +551,11 @@ class TestMonitors:
         assert data["stragglers"] == [2]
         assert data["step_time"] == pytest.approx(10.0)
 
-    def test_runtime_shim_warns_and_reexports(self):
-        import repro.runtime.monitor as shim
-
-        with pytest.warns(DeprecationWarning, match="repro.obs.monitor"):
-            importlib.reload(shim)
-        assert shim.StepMonitor is StepMonitor
+    def test_runtime_shim_is_gone(self):
+        # PR 7's repro.runtime.monitor deprecation shim is retired:
+        # the one import path is repro.obs.monitor
+        with pytest.raises(ImportError):
+            importlib.import_module("repro.runtime.monitor")
 
     def test_lane_progress_monitor(self):
         times = iter([0.0, 1.0, 2.0, 3.0])

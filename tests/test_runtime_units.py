@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.data.lm_pipeline import PrefetchingLoader, batch_at_step
-from repro.runtime.monitor import StepMonitor
+from repro.obs.monitor import StepMonitor
 from repro.training import optimizers as opt
 
 
