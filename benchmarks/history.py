@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 from typing import Dict, List, Optional
 
 HISTORY_FILENAME = "BENCH_history.jsonl"
@@ -48,21 +49,36 @@ def append_run(payload: dict, source: str, path: Optional[str] = None) -> str:
 
 def load_history(path: Optional[str] = None,
                  source: Optional[str] = None) -> List[dict]:
-    """All history lines, oldest first; malformed (truncated) lines are
-    skipped. ``source`` filters to one artifact family."""
+    """All history lines, oldest first; malformed lines are skipped WITH
+    a stderr warning — a torn line (killed mid-append) or a non-object
+    line (hand-edited file) must not take the bench gate down, but it
+    must not vanish silently either. ``source`` filters to one artifact
+    family."""
     path = history_path() if path is None else path
     if not os.path.exists(path):
         return []
     runs: List[dict] = []
     with open(path, "rt") as fh:
-        for raw in fh:
+        for lineno, raw in enumerate(fh, 1):
             raw = raw.strip()
             if not raw:
                 continue
             try:
                 run = json.loads(raw)
             except json.JSONDecodeError:
-                continue  # killed mid-append; the run never finished
+                print(
+                    f"warning: {path}:{lineno}: skipping corrupt/truncated "
+                    "history line (killed mid-append?)",
+                    file=sys.stderr,
+                )
+                continue
+            if not isinstance(run, dict):
+                print(
+                    f"warning: {path}:{lineno}: skipping non-object history "
+                    f"line ({type(run).__name__})",
+                    file=sys.stderr,
+                )
+                continue
             if source is None or run.get("source") == source:
                 runs.append(run)
     return runs
@@ -73,8 +89,15 @@ def run_metrics(run: dict, fields: tuple = ("us_per_iter",)) -> Dict[str, float]
     ``{"<source>:<record name>:<field>": value}`` for the gated fields.
     Non-numeric values are skipped."""
     out: Dict[str, float] = {}
+    if not isinstance(run, dict):
+        return out
     source = run.get("source", "")
-    for rec in run.get("records", ()):
+    records = run.get("records", ())
+    if not isinstance(records, (list, tuple)):
+        return out
+    for rec in records:
+        if not isinstance(rec, dict):
+            continue
         for field in fields:
             v = rec.get(field)
             if isinstance(v, (int, float)) and not isinstance(v, bool):

@@ -22,6 +22,11 @@ CI-scale end-to-end paths are compile-noise-dominated.
 With fewer than ``--min-runs`` historical runs for a metric the gate
 passes (warming up) — a fresh branch never fails on an empty baseline.
 
+Corrupt or truncated history lines (a bench run killed mid-append, a
+hand-edit gone wrong) are skipped with a stderr warning by the loader
+(``benchmarks.history.load_history``) — a damaged trajectory file
+degrades the baseline window, it never crashes the gate.
+
 Exit codes: 0 = pass, 1 = regression, 2 = usage/IO error.
 
 Usage (CI):

@@ -1,0 +1,163 @@
+"""Chaos smoke: inject the recovery matrix's faults and verify healing.
+
+The CI chaos step's entry point (DESIGN.md §Resilience). Runs small
+solver problems under every fault family with ``REPRO_FAULT_SEED``
+pinned, checks each one healed (or resumed) correctly, and writes the
+resulting metrics-registry snapshot — injected-fault counts, guard
+trips/recoveries, shard retry counters, path checkpoint events — as a
+JSON artifact for the CI upload.
+
+Scenarios (all on CPU-sized problems, one process):
+  * co-state NaN  -> rung-1 rebuild heals; objective matches clean run;
+  * beta NaN      -> rung-2 chunk retry heals BIT-identically;
+  * shard byte corruption -> manifest sha256 + retry heals the read;
+  * mid-path kill -> checkpoint/resume replays bit-identically;
+  * no-fault resilient run == plain engine run bit-for-bit.
+
+Exit 0 when every scenario healed; 1 otherwise (fails the CI step).
+
+Usage:
+  PYTHONPATH=src python scripts/chaos_smoke.py [--out reports/chaos_metrics.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import engine, fw_lasso, path as path_lib  # noqa: E402
+from repro.core.solver_config import FWConfig  # noqa: E402
+from repro.obs import export as obs_export  # noqa: E402
+from repro.obs import metrics as obs_metrics  # noqa: E402
+from repro.resilience import faults, guards  # noqa: E402
+from repro.sparse import io as sio  # noqa: E402
+
+
+def _problem(seed=0, p=60, m=40):
+    rng = np.random.default_rng(seed)
+    Xd = (rng.normal(size=(m, p)) * (rng.random(size=(m, p)) < 0.4)
+          ).astype(np.float32)
+    y = rng.normal(size=m).astype(np.float32)
+    return Xd, y
+
+
+def run_scenarios(seed: int) -> dict:
+    """Returns {scenario: bool} under the ambient metrics registry."""
+    results = {}
+    Xd, y = _problem(6)
+    Xt, yj = jnp.asarray(Xd.T), jnp.asarray(y)
+    key = jax.random.PRNGKey(0)
+    cfg = FWConfig(max_iters=200, delta=2.0, tol=0.0, patience=10**9,
+                   fuse_steps=8)
+    ref = engine.solve(fw_lasso.LASSO, Xt, yj, cfg, key)
+
+    # no-fault parity
+    res = guards.solve_resilient(fw_lasso.LASSO, Xt, yj, cfg, key)
+    results["no_fault_parity"] = bool(
+        np.array_equal(np.asarray(ref.alpha), np.asarray(res.alpha)))
+
+    # co_nan -> rung-1 rebuild
+    plan = faults.FaultPlan([faults.FaultSpec(kind="co_nan", at=1)],
+                            seed=seed)
+    with faults.inject(plan):
+        res = guards.solve_resilient(fw_lasso.LASSO, Xt, yj, cfg, key)
+    results["co_nan_healed"] = bool(
+        plan.fired("co_nan")
+        and np.isfinite(float(res.objective))
+        and abs(float(res.objective) - float(ref.objective))
+        <= 1e-4 * abs(float(ref.objective)))
+
+    # beta_nan -> rung-2 retry, bit-identical
+    plan = faults.FaultPlan([faults.FaultSpec(kind="beta_nan", at=1)],
+                            seed=seed)
+    with faults.inject(plan):
+        res = guards.solve_resilient(fw_lasso.LASSO, Xt, yj, cfg, key)
+    results["beta_nan_bitident"] = bool(
+        plan.fired("beta_nan")
+        and np.array_equal(np.asarray(ref.alpha), np.asarray(res.alpha)))
+
+    # shard corruption -> checksum + retry heal
+    with tempfile.TemporaryDirectory() as d:
+        r, c = np.nonzero(Xd)
+        coo = sio.COOData(r.astype(np.int64), c.astype(np.int64),
+                          Xd[r, c].astype(np.float32), y, Xd.shape)
+        sio.write_shards(d, coo, rows_per_shard=16)
+        mf = sio.read_manifest(d)
+        clean = sio.load_shards(d)
+        plan = faults.FaultPlan(
+            [faults.FaultSpec(kind="shard_corrupt", site=mf["shards"][0])],
+            seed=seed)
+        with faults.inject(plan):
+            healed = sio.load_shards(d)
+        results["shard_corrupt_healed"] = bool(
+            plan.fired("shard_corrupt")
+            and np.array_equal(clean.vals, healed.vals))
+
+    # mid-path kill -> checkpoint/resume bit-identical
+    deltas = np.geomspace(0.5, 3.0, 6)
+    pcfg = FWConfig(max_iters=100, delta=1.0, tol=0.0, patience=10**9,
+                    fuse_steps=4)
+    clean_path = path_lib.fw_path(Xt, yj, deltas, pcfg, seed=5)
+    with tempfile.TemporaryDirectory() as ck:
+        plan = faults.FaultPlan([faults.FaultSpec(kind="kill", at=3)],
+                                seed=seed)
+        killed = False
+        try:
+            with faults.inject(plan):
+                path_lib.fw_path(Xt, yj, deltas, pcfg, seed=5,
+                                 checkpoint_dir=ck)
+        except faults.InjectedKill:
+            killed = True
+        resumed = path_lib.fw_path(Xt, yj, deltas, pcfg, seed=5,
+                                   checkpoint_dir=ck, resume_from=ck)
+    results["kill_resume_bitident"] = bool(
+        killed
+        and len(resumed.points) == len(clean_path.points)
+        and all(
+            np.array_equal(a.alpha_nnz_val, b.alpha_nnz_val)
+            and np.array_equal(a.alpha_nnz_idx, b.alpha_nnz_idx)
+            and a.n_dots == b.n_dots
+            for a, b in zip(clean_path.points, resumed.points)))
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="reports/chaos_metrics.json",
+                    help="metrics snapshot artifact path")
+    args = ap.parse_args(argv)
+
+    seed = int(os.environ.get(faults.ENV_SEED, "0"))
+    reg = obs_metrics.MetricsRegistry()
+    with obs_metrics.use_registry(reg):
+        results = run_scenarios(seed)
+
+    snapshot = obs_export.snapshot_json(reg)
+    payload = {
+        "fault_seed": seed,
+        "scenarios": results,
+        "all_healed": all(results.values()),
+        "metrics": snapshot,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "wt") as fh:
+        json.dump(payload, fh, indent=2)
+
+    for name, ok in sorted(results.items()):
+        print(f"  {'PASS' if ok else 'FAIL'}  {name}")
+    print(f"chaos smoke: {'all healed' if payload['all_healed'] else 'FAILURES'}"
+          f" (seed={seed}) -> {args.out}")
+    return 0 if payload["all_healed"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

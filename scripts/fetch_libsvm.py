@@ -29,7 +29,11 @@ import tempfile
 import urllib.error
 import urllib.request
 
-from repro.sparse.io import convert_svmlight_to_shards, read_manifest
+from repro.sparse.io import (
+    convert_svmlight_to_shards,
+    read_manifest,
+    verify_shards,
+)
 
 LIBSVM_BASE = "https://www.csie.ntu.edu.tw/~cjlin/libsvmtools/datasets/regression"
 
@@ -67,8 +71,14 @@ def fetch_one(
     manifest_path = os.path.join(shard_dir, "manifest.json")
     if os.path.exists(manifest_path) and not force:
         manifest = read_manifest(shard_dir)
-        print(f"[{name}] shards already present ({manifest['m']} x {manifest['p']})")
-        return shard_dir
+        bad = verify_shards(shard_dir, manifest=manifest)
+        if not bad:
+            print(f"[{name}] shards already present "
+                  f"({manifest['m']} x {manifest['p']})")
+            return shard_dir
+        print(f"[{name}] {len(bad)} shard(s) failed their manifest sha256 "
+              f"({', '.join(bad[:3])}{'...' if len(bad) > 3 else ''}) — "
+              "re-fetching", file=sys.stderr)
 
     tmp_dir = tempfile.mkdtemp(prefix=f"{name}-")
     txt_path = os.path.join(tmp_dir, f"{name}.svmlight")
@@ -93,6 +103,26 @@ def fetch_one(
                 f"{name}: converted shape ({m}, {p}) does not match the "
                 f"published ({m_pub}, {p_pub}) — refusing to keep bad shards"
             )
+        bad = verify_shards(shard_dir, manifest=manifest)
+        if bad:
+            # write-then-read damage (flaky disk): one re-convert from the
+            # already-downloaded text, then give up loudly
+            print(f"[{name}] {len(bad)} fresh shard(s) failed their sha256 "
+                  "— re-converting once", file=sys.stderr)
+            shutil.rmtree(shard_dir, ignore_errors=True)
+            convert_svmlight_to_shards(
+                txt_path,
+                shard_dir,
+                rows_per_shard=rows_per_shard,
+                zero_based=False,
+                n_features=p_pub,
+            )
+            bad = verify_shards(shard_dir)
+            if bad:
+                raise RuntimeError(
+                    f"{name}: shards still fail their manifest sha256 after "
+                    f"re-conversion ({', '.join(bad[:3])}) — bad disk?"
+                )
         print(f"[{name}] OK: {m} samples x {p} features -> {shard_dir}")
         return shard_dir
     except Exception:

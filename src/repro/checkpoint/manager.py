@@ -128,6 +128,45 @@ def load_latest(directory: str | Path, templates: Dict[str, Any]):
     return None
 
 
+def load_latest_raw(directory: str | Path):
+    """Restore the newest valid checkpoint WITHOUT templates: returns
+    ``(step, {group: {leaf_path: np.ndarray}})`` or None.
+
+    The template-free twin of ``load_latest`` for callers that own their
+    serialization layout (``repro.resilience.checkpoint`` packs path
+    state into flat dict groups, so the stored arrays ARE the state —
+    no pytree reconstruction needed). Corrupt/partial checkpoints are
+    skipped exactly like ``load_latest``.
+    """
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    candidates = sorted(
+        (d for d in directory.iterdir() if d.name.startswith("step_")), reverse=True
+    )
+    for cand in candidates:
+        if not _verify(cand):
+            continue
+        manifest = json.loads((cand / "manifest.json").read_text())
+        state = {}
+        for name, info in manifest["groups"].items():
+            with np.load(cand / info["file"]) as data:
+                state[name] = {k: data[k] for k in data.files}
+        return manifest["step"], state
+    return None
+
+
+def prune_checkpoints(directory: str | Path, keep: int = 3) -> None:
+    """Drop all but the newest ``keep`` checkpoints (standalone twin of
+    ``CheckpointManager._rotate`` for the functional save path)."""
+    directory = Path(directory)
+    if not directory.exists() or keep <= 0:
+        return
+    ckpts = sorted(d for d in directory.iterdir() if d.name.startswith("step_"))
+    for old in ckpts[:-keep]:
+        shutil.rmtree(old, ignore_errors=True)
+
+
 class CheckpointManager:
     """Rotation + optional async (background-thread) saves."""
 

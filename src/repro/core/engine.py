@@ -78,6 +78,7 @@ from repro.core import vertex
 from repro.core.solver_config import FWConfig
 from repro.obs import metrics as obs_metrics
 from repro.obs import telemetry as obs_telemetry
+from repro.resilience import validate as _validate
 from repro.kernels.colstats.colstats import colstats as _colstats_kernel
 from repro.sparse import ops as sparse_ops
 from repro.sparse.matrix import SparseBlockMatrix
@@ -901,6 +902,10 @@ class _MetricsEntry:
         self.__wrapped__ = fn
 
     def __call__(self, oracle, Xt, y, cfg, *args, **kwargs):
+        # fail fast on NaN/Inf operands BEFORE tracing/compiling — a
+        # poisoned matrix otherwise burns a silent max_iters run
+        # (resilience/validate.py; REPRO_SKIP_INPUT_VALIDATION=1 opts out)
+        _validate.validate_inputs(Xt, y)
         reg = obs_metrics.get_registry()
         if reg is None:
             return self._fn(oracle, Xt, y, cfg, *args, **kwargs)

@@ -37,6 +37,8 @@ from repro.core.solver_config import CDConfig, FISTAConfig, FWConfig
 from repro.obs import metrics as obs_metrics
 from repro.obs import monitor as obs_monitor
 from repro.obs import trace as obs_trace
+from repro.resilience import checkpoint as path_ckpt
+from repro.resilience import faults as _faults
 from repro.sparse import ops as sparse_ops
 from repro.sparse.matrix import SparseBlockMatrix
 
@@ -132,6 +134,9 @@ def fw_path(
     oracle=None,
     *,
     solve_fn=None,
+    checkpoint_dir=None,
+    checkpoint_every: int = 1,
+    resume_from=None,
 ) -> PathResult:
     """Stochastic-FW path with the paper's l1-rescaling warm start.
 
@@ -142,6 +147,14 @@ def fw_path(
     (and ``PathPoint.gap`` certification when ``cfg.report_gap``) runs on
     a mesh. Signature: ``solve_fn(oracle, Xt, y, cfg, key, alpha0,
     delta) -> SolveResult``.
+
+    Checkpoint/resume (DESIGN.md §Resilience): with ``checkpoint_dir``
+    set, the loop state (completed points, post-split PRNG key, warm
+    start) snapshots atomically every ``checkpoint_every`` grid points;
+    ``resume_from=<dir>`` restores the newest valid snapshot and replays
+    ONLY the remaining points — bit-identical to the uninterrupted run
+    (each point's index stream is a pure function of the key at its
+    boundary and the carried alpha).
     """
     oracle = fw_lasso.LASSO if oracle is None else oracle
     if solve_fn is None:
@@ -151,16 +164,24 @@ def fw_path(
     key = jax.random.PRNGKey(seed)
     alpha = None
     points = []
+    start = 0
+    if resume_from is not None:
+        loaded = path_ckpt.load_path_checkpoint(resume_from)
+        if loaded is not None:
+            start, key, alpha, points, _ = loaded
     tracer = obs_trace.get_tracer()
     reg = obs_metrics.get_registry()
     mon = obs_monitor.StepMonitor()
     t_total = time.perf_counter()
-    total_dots = 0
-    total_iters = 0
+    total_dots = sum(pt.n_dots for pt in points)
+    total_iters = sum(pt.iterations for pt in points)
+    n = len(deltas)
     cfg = base_cfg  # delta passes as a traced arg: ONE compile per path
-    with tracer.span("fw_path", cat="path", n_points=len(deltas),
+    with tracer.span("fw_path", cat="path", n_points=n,
                      backend=cfg.backend, rule=cfg.step_rule):
-        for d in deltas:
+        for g in range(start, n):
+            d = deltas[g]
+            _faults.check_kill("path_point", g)
             if alpha is not None:
                 l1 = float(jnp.sum(jnp.abs(alpha)))
                 if l1 > 1e-12:
@@ -196,6 +217,12 @@ def fw_path(
             )
             total_dots += int(res.n_dots)
             total_iters += int(res.iterations)
+            if checkpoint_dir is not None and (
+                (g + 1) % checkpoint_every == 0 or g == n - 1
+            ):
+                path_ckpt.save_path_checkpoint(
+                    checkpoint_dir, g + 1, key, alpha, points
+                )
     _finish_path(reg, tracer)
     return PathResult(points, time.perf_counter() - t_total, total_dots, total_iters)
 
@@ -219,6 +246,9 @@ def fw_path_batched(
     oracle=None,
     *,
     solve_batched_fn=None,
+    checkpoint_dir=None,
+    checkpoint_every: int = 1,
+    resume_from=None,
 ) -> PathResult:
     """Stochastic-FW path solved in parallel delta lanes (DESIGN.md §Path).
 
@@ -233,6 +263,11 @@ def fw_path_batched(
     the skipped lane-iterations are summed into ``PathResult.saved_iters``.
     ``solve_batched_fn`` overrides ``engine.solve_batched`` (same
     signature) — the distributed driver's injection point.
+
+    Checkpoint/resume works at lane-chunk granularity:
+    ``checkpoint_every`` counts CHUNKS here, and ``resume_from=``
+    replays only the remaining chunks bit-identically (the per-chunk key
+    split and densest-solution carry fully determine the continuation).
     """
     oracle = fw_lasso.LASSO if oracle is None else oracle
     if solve_batched_fn is None:
@@ -249,17 +284,25 @@ def fw_path_batched(
     p = Xt.shape[0]
     carry = jnp.zeros((p,), Xt.dtype)  # densest solution seen so far
     points: List[Optional[PathPoint]] = [None] * n
+    start_chunk = 0
+    total_saved = 0
+    if resume_from is not None:
+        loaded = path_ckpt.load_path_checkpoint(resume_from)
+        if loaded is not None:
+            start_chunk, key, carry, done_points, total_saved = loaded
+            for i, pt in enumerate(done_points):
+                points[i] = pt
     tracer = obs_trace.get_tracer()
     reg = obs_metrics.get_registry()
     lanes_mon = obs_monitor.LaneProgressMonitor(max_iters=base_cfg.max_iters)
     t_total = time.perf_counter()
-    total_dots = 0
-    total_iters = 0
-    total_saved = 0
+    total_dots = sum(pt.n_dots for pt in points if pt is not None)
+    total_iters = sum(pt.iterations for pt in points if pt is not None)
     with tracer.span("fw_path_batched", cat="path", n_points=n,
                      lane_width=lane_width, n_chunks=n_chunks,
                      backend=base_cfg.backend):
-        for c in range(n_chunks):
+        for c in range(start_chunk, n_chunks):
+            _faults.check_kill("path_chunk", c)
             chunk = padded[c * lane_width : (c + 1) * lane_width]
             d_arr = jnp.asarray(chunk, Xt.dtype)
             l1 = jnp.sum(jnp.abs(carry))
@@ -333,6 +376,14 @@ def fw_path_batched(
                 )
                 total_dots += int(res.n_dots[i])
                 total_iters += int(res.iterations[i])
+            if checkpoint_dir is not None and (
+                (c + 1) % checkpoint_every == 0 or c == n_chunks - 1
+            ):
+                n_done = min((c + 1) * lane_width, n)
+                path_ckpt.save_path_checkpoint(
+                    checkpoint_dir, c + 1, key, carry, points[:n_done],
+                    saved_iters=total_saved,
+                )
     _finish_path(reg, tracer)
     return PathResult(
         points,

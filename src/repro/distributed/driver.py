@@ -18,6 +18,8 @@ single-device drivers (§Perf).
 """
 from __future__ import annotations
 
+import concurrent.futures
+import contextlib
 import dataclasses
 import functools
 import time
@@ -29,7 +31,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import engine, path as path_lib
+from repro.core import engine, path as path_lib, vertex
 from repro.core.engine import ColStats
 from repro.core.solver_config import FWConfig
 from repro.distributed import backend as dbackend
@@ -37,6 +39,7 @@ from repro.distributed.shard import ShardedOperand
 from repro.obs import metrics as obs_metrics
 from repro.obs import telemetry as obs_telemetry
 from repro.obs import trace as obs_trace
+from repro.resilience import faults, validate as _validate
 from repro.sparse.matrix import SparseBlockMatrix
 
 
@@ -163,10 +166,105 @@ def _solver(mesh, oracle, cfg: FWConfig, geom, mode: str, warm: bool,
             )
             return res, saved
 
+    elif mode in ("rinit", "rchunk", "rrebuild", "rresult"):
+        # Resilient chunked executor programs (resilience/guards.py):
+        # the solve loop is driven from the HOST in chunks so a watchdog
+        # can inspect and heal the state between dispatches. The state
+        # crosses the shard_map boundary with its data-sharded co leaves
+        # all-gathered to replicated global form ("gather out") and
+        # re-sliced to the local rows on the way back in ("scatter in")
+        # — an exact round trip, so chunked == monolithic bit-for-bit.
+        n_data = mesh.shape[da]
+
+        def _gather_state(state):
+            def g(leaf):
+                if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == m_local:
+                    return jax.lax.all_gather(leaf, da, tiled=True)
+                return leaf
+
+            return state._replace(co=jax.tree_util.tree_map(g, state.co))
+
+        def _scatter_state(state):
+            def s(leaf):
+                if (
+                    getattr(leaf, "ndim", 0) >= 1
+                    and leaf.shape[0] == m_local * n_data
+                ):
+                    i = jax.lax.axis_index(da)
+                    return jax.lax.dynamic_slice_in_dim(
+                        leaf, i * m_local, m_local
+                    )
+                return leaf
+
+            return state._replace(
+                co=jax.tree_util.tree_map(s, state.co)
+            )
+
+        if mode == "rinit":
+
+            def body(*args):
+                *mat_args, y_l, key, alpha0 = args
+                Xt_l, _ = _prep(mat_args, y_l)
+                return _gather_state(_init(Xt_l, y_l, key, alpha0))
+
+        elif mode == "rchunk":
+            n_turns = n_iters  # loop turns per dispatch, not iterations
+
+            def body(*args):
+                *mat_args, y_l, state, delta = args
+                Xt_l, stats = _prep(mat_args, y_l)
+                state = _scatter_state(state)
+
+                def turn(s):
+                    return engine.rule_step(
+                        oracle, Xt_l, y_l, stats, s, cfg, delta
+                    )
+
+                def fbody(_, s):
+                    return jax.lax.cond(
+                        (s.k < cfg.max_iters) & (s.stall < patience),
+                        turn,
+                        lambda st: st,
+                        s,
+                    )
+
+                state = jax.lax.fori_loop(0, n_turns, fbody, state)
+                return _gather_state(state)
+
+        elif mode == "rrebuild":
+
+            def body(*args):
+                *mat_args, y_l, state = args
+                Xt_l, _ = _prep(mat_args, y_l)
+                state = _scatter_state(state)
+                alpha = state.scale * state.beta
+                v = vertex.matvec(Xt_l, alpha, cfg)
+                co = oracle.init_co(y_l, v, alpha, state.beta.dtype, cfg)
+                return _gather_state(state._replace(co=co))
+
+        else:  # rresult
+
+            def body(*args):
+                *mat_args, y_l, state, delta = args
+                Xt_l, stats = _prep(mat_args, y_l)
+                state = _scatter_state(state)
+                return engine._result(
+                    oracle, Xt_l, y_l, stats, state, patience, cfg, delta
+                )
+
     else:  # pragma: no cover - internal
         raise ValueError(f"unknown driver mode {mode!r}")
 
-    n_operands = len(mat_specs) + (4 if mode != "history" else 3)
+    n_extra = {
+        "solve": 4,       # y, key, alpha0, delta
+        "history": 3,     # y, key, alpha0
+        "batched": 4,     # y, keys, alpha0s, deltas
+        "rinit": 3,       # y, key, alpha0
+        "rchunk": 3,      # y, state, delta
+        "rrebuild": 2,    # y, state
+        "rresult": 3,     # y, state, delta
+    }[mode]
+    n_operands = len(mat_specs) + n_extra
     in_specs = mat_specs + (P(da),) + (P(),) * (n_operands - len(mat_specs) - 1)
     mapped = shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False
@@ -191,6 +289,78 @@ def _alpha0_arr(op: ShardedOperand, alpha0):
     return jnp.asarray(alpha0, op.dtype)
 
 
+class DispatchTimeoutError(RuntimeError):
+    """A shard_map dispatch exceeded the active ``dispatch_policy``
+    timeout on every allowed attempt."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPolicy:
+    timeout_s: float
+    retries: int = 1
+
+
+_policy: Optional[DispatchPolicy] = None
+
+
+@contextlib.contextmanager
+def dispatch_policy(timeout_s: float, retries: int = 1):
+    """Bound every distributed dispatch in the with-block to
+    ``timeout_s`` wall seconds, re-dispatching up to ``retries`` times
+    before raising :class:`DispatchTimeoutError` (DESIGN.md
+    §Resilience). Each attempt runs the dispatch to completion
+    (``block_until_ready``) on a worker thread; a timed-out attempt's
+    thread cannot be cancelled — it is abandoned (XLA has no dispatch
+    cancellation) — so this is a straggler detector, not a reaper.
+    Re-dispatches are counted as ``fw_dist_redispatches`` in the
+    metrics registry."""
+    global _policy
+    prev = _policy
+    _policy = DispatchPolicy(float(timeout_s), int(retries))
+    try:
+        yield
+    finally:
+        _policy = prev
+
+
+def _call_with_policy(entry: str, fn, args):
+    """Run one dispatch under the active timeout policy (pass-through
+    when none is installed). The injected-delay fault site lives inside
+    the attempt, so a one-shot delay spec stalls the first attempt only
+    and the re-dispatch lands clean."""
+    pol = _policy
+
+    def _attempt():
+        faults.maybe_delay("dist_dispatch")
+        out = fn(*args)
+        if pol is not None:
+            jax.block_until_ready(out)
+        return out
+
+    if pol is None:
+        return _attempt()
+    reg = obs_metrics.get_registry()
+    for attempt in range(pol.retries + 1):
+        ex = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        fut = ex.submit(_attempt)
+        try:
+            return fut.result(timeout=pol.timeout_s)
+        except concurrent.futures.TimeoutError:
+            if reg is not None:
+                reg.counter(
+                    "fw_dist_redispatches",
+                    "distributed dispatch attempts abandoned after the "
+                    "dispatch_policy timeout",
+                    ("entry",),
+                ).inc(1, entry=entry)
+        finally:
+            ex.shutdown(wait=False, cancel_futures=True)
+    raise DispatchTimeoutError(
+        f"dist/{entry} exceeded {pol.timeout_s}s on "
+        f"{pol.retries + 1} attempt(s)"
+    )
+
+
 def _dispatch(entry: str, fresh: bool, dcfg: FWConfig, fn, args, **span_kw):
     """Run one shard_map dispatch under its tracer span and — only when a
     metrics registry is installed — time it to completion and fold
@@ -203,7 +373,7 @@ def _dispatch(entry: str, fresh: bool, dcfg: FWConfig, fn, args, **span_kw):
     t0 = time.perf_counter()
     with tracer.span(f"dist/{entry}", cat="dist", new_program=fresh,
                      **span_kw):
-        out = fn(*args)
+        out = _call_with_policy(entry, fn, args)
         if reg is not None:
             jax.block_until_ready(out)
     if reg is not None:
@@ -242,6 +412,7 @@ def solve(
     trajectory contract (uniform sampling replays the single-device
     index stream; on a 1-data-shard mesh the sparse lasso run is
     bit-identical). All result leaves come back replicated."""
+    _validate.validate_inputs(op, op.y)
     dcfg = dist_config(cfg, op)
     fn, fresh = _traced_solver(op.mesh, oracle, dcfg, op.geom, "solve",
                                alpha0 is not None, None)
@@ -264,6 +435,7 @@ def solve_with_history(
     """Fixed-iteration distributed run recording the objective per step
     (through the telemetry ring — same machinery as the single-device
     ``engine.solve_with_history``)."""
+    _validate.validate_inputs(op, op.y)
     dcfg = dist_config(cfg, op)
     hcfg = dataclasses.replace(
         dcfg,
@@ -291,6 +463,7 @@ def solve_batched(
     masked-lane while_loop runs per mesh cell (collectives vmap over the
     lane axis), so converged lanes freeze exactly as on one device.
     Returns ``(batched SolveResult, saved_iters)``."""
+    _validate.validate_inputs(op, op.y)
     dcfg = dist_config(cfg, op)
     fn, fresh = _traced_solver(op.mesh, oracle, dcfg, op.geom, "batched",
                                True, None)
@@ -309,17 +482,26 @@ def fw_path(
     seed: int = 0,
     oracle=None,
     report_gap: bool = True,
+    *,
+    checkpoint_dir=None,
+    checkpoint_every: int = 1,
+    resume_from=None,
 ) -> path_lib.PathResult:
     """Sequential regularization path on the mesh (paper §5 protocol,
     l1-rescaling warm starts). Certified duality gaps (oracle ``gap()``
-    gradients) ride along by default — ``PathPoint.gap``."""
+    gradients) ride along by default — ``PathPoint.gap``. Checkpoint /
+    resume kwargs behave exactly as on ``path.fw_path`` (the loop state
+    lives on the host, so mesh runs snapshot and resume identically)."""
     cfg = dataclasses.replace(base_cfg, report_gap=report_gap)
 
     def solve_fn(oracle_, Xt_, y_, cfg_, key, alpha0, delta):
         return solve(oracle_, op, cfg_, key, alpha0, delta)
 
     return path_lib.fw_path(op, op.y, deltas, cfg, seed, oracle,
-                            solve_fn=solve_fn)
+                            solve_fn=solve_fn,
+                            checkpoint_dir=checkpoint_dir,
+                            checkpoint_every=checkpoint_every,
+                            resume_from=resume_from)
 
 
 def fw_path_batched(
@@ -330,6 +512,10 @@ def fw_path_batched(
     lane_width: Optional[int] = None,
     oracle=None,
     report_gap: bool = True,
+    *,
+    checkpoint_dir=None,
+    checkpoint_every: int = 1,
+    resume_from=None,
 ) -> path_lib.PathResult:
     """Lane-pruned batched path on the mesh: chunks of deltas solve as
     lanes of ONE compiled distributed program; converged lanes freeze
@@ -342,6 +528,9 @@ def fw_path_batched(
     return path_lib.fw_path_batched(
         op, op.y, deltas, cfg, seed, lane_width, oracle,
         solve_batched_fn=solve_batched_fn,
+        checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every,
+        resume_from=resume_from,
     )
 
 

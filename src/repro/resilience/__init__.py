@@ -1,0 +1,49 @@
+"""Resilient solver runtime (DESIGN.md §Resilience).
+
+Four layers, importable independently:
+
+  * :mod:`repro.resilience.faults` — seeded deterministic fault
+    injection (test/chaos-CI harness; no-op hooks in production);
+  * :mod:`repro.resilience.guards` — the between-chunk numerical-health
+    watchdog and graceful-degradation ladder (``solve_resilient``);
+  * :mod:`repro.resilience.checkpoint` — atomic path checkpoint/resume
+    packing for ``fw_path(..., resume_from=)``;
+  * :mod:`repro.resilience.validate` — early NaN/Inf input validation
+    at the solver entry points.
+
+Submodules load lazily (PEP 562): importing ``repro.resilience.faults``
+or ``.validate`` never pulls the engine, so the low-level hooks stay
+cycle-free and cheap.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "FaultSpec": "faults",
+    "FaultPlan": "faults",
+    "InjectedKill": "faults",
+    "inject": "faults",
+    "active_plan": "faults",
+    "GuardSpec": "guards",
+    "UnrecoverableFaultError": "guards",
+    "solve_resilient": "guards",
+    "solve_resilient_sharded": "guards",
+    "resilient_solve_fn": "guards",
+    "fallback_config": "guards",
+    "save_path_checkpoint": "checkpoint",
+    "load_path_checkpoint": "checkpoint",
+    "validate_inputs": "validate",
+    "validation_enabled": "validate",
+}
+
+__all__ = sorted(_EXPORTS) + ["faults", "guards", "checkpoint", "validate"]
+
+
+def __getattr__(name: str):
+    import importlib
+
+    if name in ("faults", "guards", "checkpoint", "validate"):
+        return importlib.import_module(f"{__name__}.{name}")
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(f"{__name__}.{mod}"), name)

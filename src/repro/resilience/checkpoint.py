@@ -1,0 +1,145 @@
+"""Path-level checkpoint/resume (DESIGN.md §Resilience).
+
+Packs the regularization-path driver's loop state — completed
+:class:`~repro.core.path.PathPoint` list, the post-point PRNG key, the
+warm-start carry vector, and the lane-pruning totals — into the atomic
+checkpoint layout of ``repro.checkpoint.manager`` (tmp dir + fsync +
+rename, per-group sha256 digests), and restores it for
+``fw_path(..., resume_from=)`` / ``fw_path_batched(..., resume_from=)``.
+
+Bit-identity contract: the per-point index stream is a pure function of
+the PRNG key at the grid-point (or lane-chunk) boundary, and the warm
+start is a pure function of the carried alpha — so a run killed at any
+grid point and resumed from its last checkpoint replays the remaining
+points bit-identically to an uninterrupted run (tests/test_resilience).
+
+The nnz coefficient vectors are stored ragged: one concatenated value /
+index array plus per-point lengths, preserving the solve dtype exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt_manager
+
+PATH_GROUP = "path_points"
+POS_GROUP = "path_pos"
+
+
+def _key_to_np(key) -> Tuple[np.ndarray, bool]:
+    """Raw PRNG key data + whether the key was the new typed kind."""
+    try:
+        if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+            return np.asarray(jax.random.key_data(key)), True
+    except (AttributeError, TypeError):
+        pass
+    return np.asarray(key), False
+
+
+def _key_from_np(arr: np.ndarray, typed: bool):
+    if typed:
+        return jax.random.wrap_key_data(jnp.asarray(arr))
+    return jnp.asarray(arr)
+
+
+def pack_points(points) -> Dict[str, np.ndarray]:
+    """PathPoint list -> flat dict of arrays (manager-serializable)."""
+    n = len(points)
+    if n:
+        idx_cat = np.concatenate([np.asarray(pt.alpha_nnz_idx, np.int64)
+                                  for pt in points])
+        val_cat = np.concatenate([np.asarray(pt.alpha_nnz_val)
+                                  for pt in points])
+    else:
+        idx_cat = np.zeros(0, np.int64)
+        val_cat = np.zeros(0, np.float32)
+    return {
+        "reg": np.asarray([pt.reg for pt in points], np.float64),
+        "objective": np.asarray([pt.objective for pt in points], np.float64),
+        "l1": np.asarray([pt.l1 for pt in points], np.float64),
+        "gap": np.asarray([pt.gap for pt in points], np.float64),
+        "seconds": np.asarray([pt.seconds for pt in points], np.float64),
+        "active": np.asarray([pt.active for pt in points], np.int64),
+        "iterations": np.asarray([pt.iterations for pt in points], np.int64),
+        "n_dots": np.asarray([pt.n_dots for pt in points], np.int64),
+        "nnz_len": np.asarray(
+            [np.asarray(pt.alpha_nnz_idx).shape[0] for pt in points], np.int64
+        ),
+        "nnz_idx": idx_cat,
+        "nnz_val": val_cat,
+    }
+
+
+def unpack_points(flat: Dict[str, np.ndarray]) -> list:
+    from repro.core.path import PathPoint  # lazy: core.path imports us
+
+    lens = np.asarray(flat["nnz_len"], np.int64)
+    bounds = np.concatenate([[0], np.cumsum(lens)])
+    points = []
+    for i in range(lens.shape[0]):
+        lo, hi = int(bounds[i]), int(bounds[i + 1])
+        points.append(
+            PathPoint(
+                reg=float(flat["reg"][i]),
+                objective=float(flat["objective"][i]),
+                l1=float(flat["l1"][i]),
+                active=int(flat["active"][i]),
+                iterations=int(flat["iterations"][i]),
+                n_dots=int(flat["n_dots"][i]),
+                seconds=float(flat["seconds"][i]),
+                alpha_nnz_idx=np.asarray(flat["nnz_idx"][lo:hi], np.int64),
+                alpha_nnz_val=np.asarray(flat["nnz_val"][lo:hi]),
+                gap=float(flat["gap"][i]),
+            )
+        )
+    return points
+
+
+def save_path_checkpoint(
+    directory,
+    index: int,
+    key,
+    carry,
+    points,
+    saved_iters: int = 0,
+    *,
+    keep: int = 3,
+) -> None:
+    """Atomic snapshot at a grid-point / lane-chunk boundary.
+
+    ``index`` is the next point (or chunk) to run; ``key`` the PRNG key
+    AFTER the completed points' splits; ``carry`` the warm-start alpha
+    the next point starts from."""
+    key_np, typed = _key_to_np(key)
+    pos = {
+        "next": np.int64(index),
+        "key": key_np,
+        "key_typed": np.int64(typed),
+        "carry": np.asarray(carry),
+        "saved": np.int64(saved_iters),
+    }
+    ckpt_manager.save_checkpoint(
+        directory, index, {POS_GROUP: pos, PATH_GROUP: pack_points(points)}
+    )
+    ckpt_manager.prune_checkpoints(directory, keep=keep)
+
+
+def load_path_checkpoint(directory):
+    """Latest valid path checkpoint, or None.
+
+    Returns ``(next_index, key, carry, points, saved_iters)`` with
+    ``key`` ready for ``jax.random.split`` and ``carry`` a jnp array.
+    """
+    loaded = ckpt_manager.load_latest_raw(directory)
+    if loaded is None:
+        return None
+    _, state = loaded
+    pos = state[POS_GROUP]
+    key = _key_from_np(pos["key"], bool(int(pos["key_typed"])))
+    carry = jnp.asarray(pos["carry"])
+    points = unpack_points(state[PATH_GROUP])
+    return int(pos["next"]), key, carry, points, int(pos["saved"])

@@ -1,0 +1,434 @@
+"""Numerical-health watchdog + graceful-degradation ladder (DESIGN.md
+§Resilience).
+
+``solve_resilient`` is a host-driven twin of ``engine.solve``: the same
+jitted loop body advances in chunks of ``GuardSpec.chunk_steps`` loop
+turns (each turn = one fused K-step chunk or one rule step — exactly
+``engine.run_loop``'s turn, with the §Stopping condition masked inside
+the chunk so a no-fault run is bit-identical to ``engine.solve``), and
+BETWEEN chunks a jitted health check inspects the state: NaN/Inf in
+beta / scale / the oracle co-state, plus (opt-in) certified-gap
+monotonicity within a tolerance band.
+
+On a trip the guard walks a graceful-degradation ladder:
+
+  1. **rebuild co-state** by exact matvec from the live alpha —
+     generalizing the PARTAN drift odometer in ``core/step_rule.py``
+     (``oracle.init_co(y, X @ alpha, ...)``): FW tolerates an
+     approximate oracle (Kerdreux et al., 2018), so a ulp-level co
+     rebuild preserves the convergence guarantee;
+  2. **retry the chunk** from the pre-chunk state through the per-step
+     reference executor (``engine._fused_ref_chunk`` — bit-identical to
+     the megakernel by the §Perf contract), discarding the corrupt
+     result entirely;
+  3. **fall back a backend rung** — pallas→xla, sparse-kernel→plain
+     sparse gathers — re-deriving the padded matrix and column stats
+     under the degraded config, and continue there.
+
+Every check, trip, and recovery is counted in the ``obs/metrics.py``
+registry (``fw_guard_checks`` / ``fw_guard_trips{reason}`` /
+``fw_guard_recoveries{rung}``); an exhausted ladder raises
+:class:`UnrecoverableFaultError`.
+
+``solve_resilient_sharded`` runs the same watchdog + ladder (rungs 1-2)
+over the distributed driver's chunked shard_map programs — the co-state
+is all-gathered to replicated form at chunk boundaries so the host can
+inspect and heal it, and re-sliced per mesh cell on the way back in
+(an exact round trip: no bit drift).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, vertex
+from repro.core.solver_config import FWConfig
+from repro.obs import metrics as obs_metrics
+from repro.resilience import faults, validate
+
+
+class UnrecoverableFaultError(RuntimeError):
+    """The degradation ladder ran out of rungs (or trips) — the run
+    cannot be healed; the caller decides whether to restart cold."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardSpec:
+    """Watchdog configuration.
+
+    Attributes:
+      chunk_steps: loop turns per host dispatch (each turn advances
+        ``cfg.fuse_steps`` iterations when fused, else 1) — the health
+        check granularity.
+      check_every: health-check every N chunks (1 = every chunk).
+      gap_check_every: certified-gap monotonicity check every N chunks;
+        0 (default) disables it — the gap is a full O(nnz) pass.
+      gap_growth_limit: trip when the certified gap exceeds
+        ``limit * running_min`` (the paper's gap decays on average;
+        explosive growth means corrupt state).
+      max_trips: total ladder trips tolerated before giving up.
+    """
+
+    chunk_steps: int = 8
+    check_every: int = 1
+    gap_check_every: int = 0
+    gap_growth_limit: float = 100.0
+    max_trips: int = 8
+
+
+# --------------------------------------------------------------------------
+# Jitted pieces (compile once per (oracle, cfg) like the engine entries)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("oracle", "cfg"))
+def _prep(oracle, Xt, y, cfg, key, alpha0=None):
+    """Stats + initial state + padded hot-loop matrix — the same ops
+    ``engine.solve`` runs before its while_loop, in one jitted program
+    so the produced values match the engine's bit-for-bit."""
+    stats = engine.precompute_colstats(Xt, y, cfg) if oracle.needs_stats else None
+    state0 = engine.init_state(oracle, Xt, y, key, alpha0, cfg)
+    Xt_run = vertex.pad_backend_matrix(Xt, cfg)
+    return stats, state0, Xt_run
+
+
+@functools.partial(jax.jit, static_argnames=("oracle", "cfg", "n_turns", "use_ref"))
+def _advance(oracle, Xt_run, y, stats, state, cfg, delta, n_turns, use_ref):
+    """``n_turns`` of ``engine.run_loop``'s body with the loop condition
+    masked per turn — a fixed-length, resumable rendering of the same
+    while_loop (identical final state; spent turns are no-ops).
+    ``use_ref=True`` forces the per-step reference executor for fused
+    configs (ladder rung 2)."""
+    patience = engine._patience(cfg)
+    fused = vertex.fused_supported(oracle, cfg)
+
+    def turn(s):
+        if fused and not use_ref:
+            return engine.fused_chunk(oracle, Xt_run, y, stats, s, cfg, delta)
+        if fused:
+            return engine._fused_ref_chunk(oracle, Xt_run, y, stats, s, cfg, delta)
+        return engine.rule_step(oracle, Xt_run, y, stats, s, cfg, delta)
+
+    def body(_, s):
+        return jax.lax.cond(
+            (s.k < cfg.max_iters) & (s.stall < patience),
+            turn,
+            lambda st: st,
+            s,
+        )
+
+    return jax.lax.fori_loop(0, n_turns, body, state)
+
+
+@jax.jit
+def _health_flags(state):
+    """(beta_ok, co_ok, done-ish scalars) in ONE device round trip."""
+    beta_ok = jnp.all(jnp.isfinite(state.beta)) & jnp.isfinite(state.scale)
+    co_ok = jnp.asarray(True)
+    for leaf in jax.tree_util.tree_leaves(state.co):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            co_ok = co_ok & jnp.all(jnp.isfinite(leaf))
+    return beta_ok, co_ok, state.k, state.stall
+
+
+@functools.partial(jax.jit, static_argnames=("oracle", "cfg"))
+def _rebuild_co(oracle, Xt_run, y, state, cfg):
+    """Ladder rung 1: exact-matvec co-state rebuild from the live alpha
+    (the PARTAN odometer's refresh, generalized to any oracle)."""
+    alpha = state.scale * state.beta
+    v = vertex.matvec(Xt_run, alpha, cfg)
+    co = oracle.init_co(y, v, alpha, state.beta.dtype, cfg)
+    return state._replace(co=co)
+
+
+@functools.partial(jax.jit, static_argnames=("oracle", "cfg"))
+def _gap(oracle, Xt_run, y, state, cfg, delta):
+    return engine.certified_gap(
+        oracle, Xt_run, y, state.co, state.beta, state.scale, delta, cfg
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("oracle", "cfg"))
+def _finalize(oracle, Xt_run, y, stats, state, cfg, delta):
+    return engine._result(
+        oracle, Xt_run, y, stats, state, engine._patience(cfg), cfg, delta
+    )
+
+
+# --------------------------------------------------------------------------
+# Ladder bookkeeping
+# --------------------------------------------------------------------------
+
+
+def fallback_config(cfg: FWConfig) -> Optional[FWConfig]:
+    """One rung down the backend ladder, or None at the bottom:
+    pallas -> xla (same math, no custom kernels); kernel-dispatched
+    sparse -> plain-XLA sparse gathers. The matrix layout never changes
+    (a SparseBlockMatrix stays sparse), so the state carries over."""
+    if cfg.backend == "pallas":
+        return dataclasses.replace(cfg, backend="xla")
+    if cfg.backend == "sparse" and vertex.use_sparse_kernel(cfg):
+        return dataclasses.replace(cfg, sparse_kernel=False)
+    return None
+
+
+def _observe(name: str, backend: str, **labels) -> None:
+    reg = obs_metrics.get_registry()
+    if reg is None:
+        return
+    helps = {
+        "fw_guard_checks": "watchdog health checks between chunks",
+        "fw_guard_trips": "watchdog trips by trip reason",
+        "fw_guard_recoveries": "successful ladder recoveries by rung",
+        "fw_guard_unrecovered": "ladder exhaustions (solve aborted)",
+    }
+    names = ("backend",) + tuple(sorted(labels))
+    reg.counter(name, helps[name], names).inc(1, backend=backend, **labels)
+
+
+def _healthy(state) -> tuple:
+    beta_ok, co_ok, _, _ = _health_flags(state)
+    return bool(beta_ok), bool(co_ok)
+
+
+# --------------------------------------------------------------------------
+# Single-device resilient solve
+# --------------------------------------------------------------------------
+
+
+def solve_resilient(
+    oracle,
+    Xt,
+    y,
+    cfg: FWConfig,
+    key,
+    alpha0=None,
+    delta=None,
+    *,
+    guard: Optional[GuardSpec] = None,
+) -> engine.SolveResult:
+    """``engine.solve`` with the watchdog + degradation ladder. With no
+    faults and no trips the returned SolveResult is bit-identical to
+    ``engine.solve``'s (same jitted ops, same trajectory)."""
+    if cfg.backend == "distributed":
+        raise ValueError(
+            "distributed operands go through solve_resilient_sharded"
+        )
+    guard = GuardSpec() if guard is None else guard
+    validate.validate_inputs(Xt, y)
+    vertex.check_matrix_backend(Xt, cfg)
+    delta_arr = jnp.asarray(cfg.delta if delta is None else delta)
+    stats, state, Xt_run = _prep(oracle, Xt, y, cfg, key, alpha0)
+    live_cfg = cfg
+    trips = 0
+    chunk = 0
+    min_gap = float("inf")
+
+    def done(s) -> bool:
+        patience = engine._patience(live_cfg)
+        return bool((s.k >= live_cfg.max_iters) | (s.stall >= patience))
+
+    while not done(state):
+        prev = state
+        state = _advance(
+            oracle, Xt_run, y, stats, state, live_cfg, delta_arr,
+            guard.chunk_steps, False,
+        )
+        state = faults.maybe_corrupt_state(state, chunk)
+        chunk += 1
+        if chunk % guard.check_every:
+            continue
+        _observe("fw_guard_checks", live_cfg.backend)
+        beta_ok, co_ok = _healthy(state)
+        reason = None
+        if not (beta_ok and co_ok):
+            reason = "nonfinite_beta" if not beta_ok else "nonfinite_co"
+        elif guard.gap_check_every and chunk % guard.gap_check_every == 0:
+            g = float(_gap(oracle, Xt_run, y, state, live_cfg, delta_arr))
+            if g == g and g < min_gap:  # finite and improving
+                min_gap = g
+            elif g != g or (
+                min_gap < float("inf")
+                and g > guard.gap_growth_limit * max(abs(min_gap), 1e-30)
+            ):
+                reason = "gap_regression"
+        if reason is None:
+            continue
+
+        # ---- the ladder -------------------------------------------------
+        trips += 1
+        _observe("fw_guard_trips", live_cfg.backend, reason=reason)
+        if trips > guard.max_trips:
+            _observe("fw_guard_unrecovered", live_cfg.backend)
+            raise UnrecoverableFaultError(
+                f"guard tripped {trips} times (> max_trips="
+                f"{guard.max_trips}); last reason: {reason}"
+            )
+        recovered = False
+        # rung 1: exact-matvec co rebuild (needs a finite alpha)
+        if beta_ok:
+            cand = _rebuild_co(oracle, Xt_run, y, state, live_cfg)
+            if all(_healthy(cand)):
+                state, recovered = cand, True
+                min_gap = float("inf")
+                _observe(
+                    "fw_guard_recoveries", live_cfg.backend, rung="rebuild_co"
+                )
+        # rung 2: discard the chunk, retry from prev via per-step executor
+        if not recovered:
+            cand = _advance(
+                oracle, Xt_run, y, stats, prev, live_cfg, delta_arr,
+                guard.chunk_steps, True,
+            )
+            if all(_healthy(cand)):
+                state, recovered = cand, True
+                min_gap = float("inf")
+                _observe(
+                    "fw_guard_recoveries", live_cfg.backend, rung="retry_chunk"
+                )
+        # rung 3: degrade the backend and retry from prev there
+        if not recovered:
+            fb = fallback_config(live_cfg)
+            if fb is not None:
+                fb_stats, _, fb_run = _prep(oracle, Xt, y, fb, key, alpha0)
+                cand = _advance(
+                    oracle, fb_run, y, fb_stats, prev, fb, delta_arr,
+                    guard.chunk_steps, False,
+                )
+                if all(_healthy(cand)):
+                    _observe(
+                        "fw_guard_recoveries", fb.backend,
+                        rung="backend_fallback",
+                    )
+                    state, recovered = cand, True
+                    live_cfg, stats, Xt_run = fb, fb_stats, fb_run
+                    min_gap = float("inf")
+        if not recovered:
+            _observe("fw_guard_unrecovered", live_cfg.backend)
+            raise UnrecoverableFaultError(
+                f"degradation ladder exhausted (reason: {reason}, "
+                f"backend: {live_cfg.backend})"
+            )
+
+    return _finalize(oracle, Xt_run, y, stats, state, live_cfg, delta_arr)
+
+
+def resilient_solve_fn(guard: Optional[GuardSpec] = None):
+    """A ``solve_fn`` for ``path.fw_path(..., solve_fn=...)`` that routes
+    every grid point through ``solve_resilient``."""
+
+    def fn(oracle, Xt, y, cfg, key, alpha0, delta):
+        return solve_resilient(
+            oracle, Xt, y, cfg, key, alpha0, delta, guard=guard
+        )
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Distributed resilient solve (shard_map chunks, ladder rungs 1-2)
+# --------------------------------------------------------------------------
+
+
+def solve_resilient_sharded(
+    oracle,
+    op,
+    cfg: FWConfig,
+    key,
+    alpha0=None,
+    delta=None,
+    *,
+    guard: Optional[GuardSpec] = None,
+) -> engine.SolveResult:
+    """``distributed.driver.solve`` under the watchdog: the loop runs as
+    chunked shard_map dispatches ("rchunk" mode) whose co-state comes
+    back all-gathered/replicated, so the host can health-check and heal
+    it between chunks exactly like the single-device guard. Ladder:
+    rung 1 (co rebuild, "rrebuild" program) and rung 2 (chunk retry) —
+    there is no backend rung on a mesh. Bit-identical to
+    ``driver.solve`` for a no-fault run (the gather/slice round trip is
+    exact and the chunked loop replays ``run_loop``'s turns)."""
+    from repro.distributed import driver as ddriver  # lazy: layered on top
+
+    guard = GuardSpec() if guard is None else guard
+    validate.validate_inputs(op, op.y)
+    dcfg = ddriver.dist_config(cfg, op)
+    if dcfg.step_rule != "classic" or dcfg.telemetry is not None:
+        raise ValueError(
+            "solve_resilient_sharded supports the classic step rule with "
+            "telemetry off (rule/ring state is not gathered across chunks)"
+        )
+    delta_arr = jnp.asarray(cfg.delta if delta is None else delta)
+    mkey = (op.mesh, oracle, dcfg, op.geom)
+    rinit, f0 = ddriver._traced_solver(*mkey, "rinit", alpha0 is not None, None)
+    rchunk, f1 = ddriver._traced_solver(
+        *mkey, "rchunk", False, guard.chunk_steps
+    )
+    rrebuild, _ = ddriver._traced_solver(*mkey, "rrebuild", False, None)
+    rresult, _ = ddriver._traced_solver(*mkey, "rresult", False, None)
+
+    mat = op.matrix_args
+    state = ddriver._call_with_policy(
+        "rinit", rinit, (*mat, op.y, key, ddriver._alpha0_arr(op, alpha0))
+    )
+    patience = engine._patience(dcfg)
+    trips = 0
+    chunk = 0
+
+    def done(s) -> bool:
+        return bool((s.k >= dcfg.max_iters) | (s.stall >= patience))
+
+    while not done(state):
+        prev = state
+        state = ddriver._call_with_policy(
+            "rchunk", rchunk, (*mat, op.y, state, delta_arr)
+        )
+        state = faults.maybe_corrupt_state(state, chunk)
+        chunk += 1
+        if chunk % guard.check_every:
+            continue
+        _observe("fw_guard_checks", "distributed")
+        beta_ok, co_ok = _healthy(state)
+        if beta_ok and co_ok:
+            continue
+        reason = "nonfinite_beta" if not beta_ok else "nonfinite_co"
+        trips += 1
+        _observe("fw_guard_trips", "distributed", reason=reason)
+        if trips > guard.max_trips:
+            _observe("fw_guard_unrecovered", "distributed")
+            raise UnrecoverableFaultError(
+                f"guard tripped {trips} times on the mesh (reason: {reason})"
+            )
+        recovered = False
+        if beta_ok:
+            cand = ddriver._call_with_policy(
+                "rrebuild", rrebuild, (*mat, op.y, state)
+            )
+            if all(_healthy(cand)):
+                state, recovered = cand, True
+                _observe(
+                    "fw_guard_recoveries", "distributed", rung="rebuild_co"
+                )
+        if not recovered:
+            cand = ddriver._call_with_policy(
+                "rchunk", rchunk, (*mat, op.y, prev, delta_arr)
+            )
+            if all(_healthy(cand)):
+                state, recovered = cand, True
+                _observe(
+                    "fw_guard_recoveries", "distributed", rung="retry_chunk"
+                )
+        if not recovered:
+            _observe("fw_guard_unrecovered", "distributed")
+            raise UnrecoverableFaultError(
+                f"mesh ladder exhausted (reason: {reason}) — no backend "
+                "rung exists under shard_map"
+            )
+
+    return ddriver._call_with_policy(
+        "rresult", rresult, (*mat, op.y, state, delta_arr)
+    )

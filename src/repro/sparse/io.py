@@ -17,19 +17,105 @@ SparseBlockMatrix construction.
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
 import time
-from typing import Iterator, NamedTuple, Optional, Tuple
+from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
 from repro.obs import metrics as obs_metrics
 from repro.obs.trace import traced
+from repro.resilience import faults as _faults
 from repro.sparse.matrix import SparseBlockMatrix
 
 MANIFEST_NAME = "manifest.json"
 SHARD_FORMAT = "coo-npz-v1"
+
+# Bounded exponential backoff for checksum-failed shard reads
+# (DESIGN.md §Resilience): transient damage — a torn NFS read, an
+# injected byte flip — heals on re-read; persistent on-disk corruption
+# exhausts the retries and raises ShardIntegrityError.
+SHARD_READ_RETRIES = 3
+SHARD_RETRY_BASE_S = 0.05
+
+
+class ShardIntegrityError(RuntimeError):
+    """A shard file failed its manifest sha256 on every read attempt."""
+
+
+def _sha256_hex(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def _shard_checksums(out_dir, names) -> Dict[str, str]:
+    """sha256 of each just-written shard file, for the manifest."""
+    sums = {}
+    for name in names:
+        with open(os.path.join(out_dir, name), "rb") as fh:
+            sums[name] = _sha256_hex(fh.read())
+    return sums
+
+
+def _read_shard_bytes_verified(
+    shard_dir, name: str, expected: Optional[str]
+) -> bytes:
+    """Read one shard file, verify it against the manifest checksum, and
+    retry with exponential backoff on mismatch. ``expected=None``
+    (legacy pre-checksum manifests) skips verification. The parsed
+    arrays always come from the VERIFIED byte buffer, so what was
+    checked is exactly what is used."""
+    path = os.path.join(shard_dir, name)
+    reg = obs_metrics.get_registry()
+    for attempt in range(SHARD_READ_RETRIES + 1):
+        with open(path, "rb") as fh:
+            data = fh.read()
+        data = _faults.maybe_corrupt_bytes(name, data)
+        if expected is None or _sha256_hex(data) == expected:
+            return data
+        if reg is not None:
+            reg.counter(
+                "fw_shard_checksum_failures",
+                "shard reads whose bytes failed the manifest sha256",
+                ("shard",),
+            ).inc(1, shard=name)
+        if attempt < SHARD_READ_RETRIES:
+            time.sleep(SHARD_RETRY_BASE_S * (2**attempt))
+            if reg is not None:
+                reg.counter(
+                    "fw_shard_retries",
+                    "checksum-failed shard reads retried with backoff",
+                    ("shard",),
+                ).inc(1, shard=name)
+    raise ShardIntegrityError(
+        f"shard {name!r} failed its manifest sha256 on "
+        f"{SHARD_READ_RETRIES + 1} read attempts — on-disk corruption; "
+        "re-fetch or re-convert the dataset (scripts/fetch_libsvm.py)"
+    )
+
+
+def verify_shards(shard_dir, *, manifest: Optional[dict] = None) -> List[str]:
+    """Names of shard files whose on-disk bytes fail the manifest sha256
+    (empty list = healthy, or a legacy manifest without checksums).
+    Reads the disk directly — deliberately NOT routed through the
+    fault-injection hook, so it reports true on-disk state."""
+    if manifest is None:
+        manifest = read_manifest(shard_dir)
+    sums = manifest.get("checksums")
+    if not sums:
+        return []
+    bad = []
+    for name in manifest["shards"]:
+        try:
+            with open(os.path.join(shard_dir, name), "rb") as fh:
+                ok = _sha256_hex(fh.read()) == sums.get(name)
+        except OSError:
+            ok = False
+        if not ok:
+            bad.append(name)
+    return bad
 
 
 class COOData(NamedTuple):
@@ -172,6 +258,7 @@ def write_shards(
         "p": int(p),
         "rows_per_shard": int(rows_per_shard),
         "shards": names,
+        "checksums": _shard_checksums(out_dir, names),
     }
     manifest_path = os.path.join(out_dir, MANIFEST_NAME)
     with open(manifest_path, "wt") as fh:
@@ -260,6 +347,7 @@ def convert_svmlight_to_shards(
         "p": int(p),
         "rows_per_shard": int(rows_per_shard),
         "shards": names,
+        "checksums": _shard_checksums(out_dir, names),
     }
     manifest_path = os.path.join(out_dir, MANIFEST_NAME)
     with open(manifest_path, "wt") as fh:
@@ -313,11 +401,14 @@ def iter_shards_for_rows(
     if manifest is None:
         manifest = read_manifest(shard_dir)
     p = manifest["p"]
+    checksums = manifest.get("checksums") or {}
     reg = obs_metrics.get_registry()
     for name in shards_for_rows(manifest, lo, hi):
-        path = os.path.join(shard_dir, name)
         t0 = time.perf_counter()
-        with np.load(path) as z:
+        # checksum-verified read with bounded retries; the arrays parse
+        # from the verified buffer (never a second unverified disk read)
+        data = _read_shard_bytes_verified(shard_dir, name, checksums.get(name))
+        with np.load(io.BytesIO(data)) as z:
             off = int(z["row_offset"])
             chunk = COOData(
                 z["rows"].astype(np.int64) + off,
@@ -331,7 +422,7 @@ def iter_shards_for_rows(
             # bytes per .npz open (the unit the out-of-core assembler and
             # the per-mesh-cell loader both pay)
             elapsed = time.perf_counter() - t0
-            n_bytes = os.path.getsize(path)
+            n_bytes = len(data)
             reg.counter(
                 "fw_shard_reads", "coo-npz-v1 shard files opened"
             ).inc(1)

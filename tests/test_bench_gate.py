@@ -58,6 +58,33 @@ class TestHistoryFile:
             fh.write('{"source": "BENCH_kern')  # killed mid-append
         assert len(bench_history.load_history(str(hp))) == 1
 
+    def test_truncated_line_warns_on_stderr(self, tmp_path, capsys):
+        hp = tmp_path / "BENCH_history.jsonl"
+        bench_history.append_run(_payload(100.0), "BENCH_kernels.json",
+                                 path=str(hp))
+        with open(hp, "at") as fh:
+            fh.write('{"source": "BENCH_kern')
+        bench_history.load_history(str(hp))
+        err = capsys.readouterr().err
+        assert "skipping corrupt/truncated history line" in err
+        assert str(hp) in err
+
+    def test_non_object_json_line_skipped_with_warning(self, tmp_path, capsys):
+        hp = tmp_path / "BENCH_history.jsonl"
+        bench_history.append_run(_payload(100.0), "BENCH_kernels.json",
+                                 path=str(hp))
+        with open(hp, "at") as fh:
+            fh.write("null\n42\n[1, 2]\n")  # valid JSON, not history runs
+        runs = bench_history.load_history(str(hp))
+        assert len(runs) == 1
+        assert "skipping non-object history line" in capsys.readouterr().err
+
+    def test_run_metrics_tolerates_malformed_records(self):
+        assert bench_history.run_metrics({"records": "oops"}) == {}
+        assert bench_history.run_metrics(
+            {"source": "s", "records": [17, {"name": "ok", "us_per_iter": 2}]}
+        ) == {"s:ok:us_per_iter": 2.0}
+
     def test_source_filter(self, tmp_path):
         hp = str(tmp_path / "h.jsonl")
         bench_history.append_run(_payload(1.0), "BENCH_a.json", path=hp)
